@@ -1,0 +1,69 @@
+"""Paper Fig. 8 ("where to cache") / Fig. 9 ("what to cache") analog, plus
+the Table II concurrency/occupancy analog.
+
+Fig. 8 on TPU: the reg/sm/mix distinction collapses to the VMEM-resident
+fraction (DESIGN.md §2) — we sweep it and report projected GCells/s
+(Eq. 10) next to the measured device-loop baseline.
+
+Fig. 9: the CG cache-policy matrix — measured fused-kernel correctness and
+planner-projected traffic per policy.
+
+Table II: the occupancy knob on TPU is the streaming subtile size;
+smaller working set -> more resident rows -> less HBM traffic per step.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.util import row
+from repro.core.hardware import TPU_V5E
+from repro.core.perf_model import project_perks, project_host_loop
+from repro.core.cache_policy import plan_caching, cg_arrays
+from repro.kernels.common import get_spec
+from repro.kernels.stencil3d import plan_resident_planes
+
+
+def run_where(domain=(4096, 4096), steps=1000):
+    """Fig. 8 analog: resident fraction sweep for a 2d5pt-like stencil."""
+    spec = get_spec("2d5pt")
+    cells = int(np.prod(domain))
+    base = project_host_loop(TPU_V5E, n_steps=steps, domain_cells=cells,
+                             dtype_bytes=4)
+    for frac in (0.0, 0.25, 0.5, 0.75, 1.0):
+        cached = int(cells * frac)
+        halo = 2 * spec.radius * domain[1] * 4 if frac < 1.0 else 0
+        p = project_perks(TPU_V5E, n_steps=steps, domain_cells=cells,
+                          dtype_bytes=4, cached_cells=cached,
+                          halo_bytes_per_step=halo)
+        row(f"where_cache_frac_{int(frac * 100):03d}",
+            p.t_total / steps * 1e6,
+            f"gcells={p.cells_per_s / 1e9:.0f};speedup={base.t_total / p.t_total:.2f}x;"
+            f"bound={p.bound}")
+
+
+def run_what():
+    """Fig. 9 analog: CG policies x problem sizes (planner projections)."""
+    for name, n, nnz in (("small", 20_000, 100_000),
+                         ("mid", 400_000, 4_000_000),
+                         ("large", 4_000_000, 60_000_000)):
+        budget = int(TPU_V5E.onchip_bytes * 0.9)
+        plan = plan_caching(cg_arrays(n, nnz, 4), budget)
+        per_iter_traffic = 4 * n * 4 * 2.25 + nnz * 8
+        row(f"what_cache_{name}", 0.0,
+            ";".join(f"{a.array.name}={a.fraction:.2f}"
+                     for a in plan.assignments) +
+            f";saved_frac={plan.traffic_saved_per_step / per_iter_traffic:.2f}")
+
+
+def run_concurrency(domain=(8192, 8192)):
+    """Table II analog: streaming working set vs resident capacity."""
+    spec = get_spec("2d5pt")
+    for sub_rows in (512, 256, 128, 64, 32):
+        planes = plan_resident_planes(domain, 4, spec, sub_rows=sub_rows)
+        working = (2 * (sub_rows + 2 * spec.radius) + 2 * spec.radius) \
+            * domain[1] * 4
+        cached_frac = planes / domain[0]
+        traffic = 2 * (domain[0] - planes) * domain[1] * 4
+        row(f"concurrency_sub{sub_rows:03d}", 0.0,
+            f"working_set_mb={working / 1e6:.1f};resident_rows={planes};"
+            f"cached={cached_frac:.0%};hbm_per_step_mb={traffic / 1e6:.0f}")

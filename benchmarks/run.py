@@ -1,0 +1,54 @@
+"""Benchmark driver — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+
+  stencil_large_*   Fig. 5  (large-domain stencils, host vs PERKS)
+  stencil_small_*   Fig. 6  (small domains — fully VMEM-resident regime)
+  cg_*              Fig. 7  (CG suite, host vs PERKS + policy planner)
+  where_cache_*     Fig. 8  (where/how much to cache sweep)
+  what_cache_*      Fig. 9  (what to cache: CG policy matrix)
+  concurrency_*     Table II (occupancy/working-set analog)
+  decode_*          beyond-paper: persistent LM decode vs host loop
+  train_fused_*     beyond-paper: K optimizer steps per dispatch
+  roofline_*        §Roofline cells from the dry-run artifacts (if present)
+
+Use REPRO_BENCH_FULL=1 for the full sweep (default trims to keep the run
+a few minutes on one CPU core).
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+
+def main() -> None:
+    quick = os.environ.get("REPRO_BENCH_FULL", "0") != "1"
+    from benchmarks import stencil_bench, cg_bench, policy_bench, decode_bench
+    from benchmarks import train_bench
+    from benchmarks.util import row
+
+    print("name,us_per_call,derived")
+    gm_large = stencil_bench.run("large", quick=quick)
+    gm_small = stencil_bench.run("small", quick=quick)
+    gm_cg = cg_bench.run(quick=quick)
+    policy_bench.run_where()
+    policy_bench.run_what()
+    policy_bench.run_concurrency()
+    gm_dec = decode_bench.run(archs=("qwen2-0.5b", "mamba2-780m") if quick
+                              else ("qwen2-0.5b", "h2o-danube-1.8b",
+                                    "mamba2-780m", "zamba2-1.2b"))
+    train_bench.run(quick=quick)
+
+    try:
+        from benchmarks import roofline
+        roofline.csv_rows("single")
+    except Exception as e:  # dry-run artifacts may not exist yet
+        row("roofline_missing", 0.0, f"run launch.dryrun first ({e})")
+
+    row("summary_geomeans", 0.0,
+        f"stencil_large={gm_large:.2f}x;stencil_small={gm_small:.2f}x;"
+        f"cg={gm_cg:.2f}x;decode={gm_dec:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Paper Fig. 5 (large domains) / Fig. 6 (small domains) analog.
+
+Measured on this container: host-loop vs PERKS device-loop wall clock for
+every Table-III stencil (CPU XLA; the execution-model delta is exactly what
+PERKS removes). TPU-projected columns come from the paper's performance
+model (Eqs. 5-11) with v5e constants and the cache plan chosen by the
+policy: 'small' domains fit VMEM entirely (Fig. 6 regime), 'large' domains
+cache the planner's row fraction (Fig. 5 regime).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.util import time_fn, row
+from repro.core.hardware import TPU_V5E
+from repro.core.perf_model import project_host_loop, project_perks
+from repro.kernels.common import BENCHMARKS
+from repro.kernels.stencil3d import plan_resident_planes
+from repro.solvers import stencil as ssol
+
+# CPU-sized measurement domains; projection domains mirror Table IV scale.
+MEAS = {2: (96, 128), 3: (24, 24, 48)}
+PROJ = {
+    "small": {2: (3072, 1152), 3: (160, 160, 128)},     # fits VMEM
+    "large": {2: (8192, 8192), 3: (512, 512, 512)},
+}
+STEPS = 50
+
+
+def projected(spec, domain, steps=1000):
+    cells = int(np.prod(domain))
+    planes = plan_resident_planes(domain, 4, spec)
+    row_cells = int(np.prod(domain[1:]))
+    cached = planes * row_cells
+    halo = 2 * spec.radius * row_cells * 4  # boundary rows traffic per step
+    base = project_host_loop(TPU_V5E, n_steps=steps, domain_cells=cells,
+                             dtype_bytes=4)
+    perks = project_perks(TPU_V5E, n_steps=steps, domain_cells=cells,
+                          dtype_bytes=4, cached_cells=cached,
+                          halo_bytes_per_step=halo if cached < cells else 0)
+    return cached / cells, base.t_total / perks.t_total, perks
+
+
+def run(domain_kind: str = "large", quick: bool = False):
+    names = list(BENCHMARKS)
+    if quick:
+        names = ["2d5pt", "2d9pt", "2ds25pt", "3d7pt", "poisson"]
+    speedups = []
+    for name in names:
+        spec = BENCHMARKS[name]
+        x = jax.random.normal(jax.random.key(0), MEAS[spec.ndim], jnp.float32)
+        t_host, _ = time_fn(lambda: ssol.run_host_loop(x, spec, STEPS))
+        t_dev, _ = time_fn(lambda: ssol.run_device_loop(x, spec, STEPS))
+        frac, proj_speedup, perks = projected(
+            spec, PROJ[domain_kind][spec.ndim])
+        meas = t_host / t_dev
+        speedups.append(meas)
+        row(f"stencil_{domain_kind}_{name}",
+            t_dev / STEPS * 1e6,
+            f"host_us={t_host / STEPS * 1e6:.1f};speedup={meas:.2f}x;"
+            f"cached={frac:.0%};tpu_projected={proj_speedup:.2f}x;"
+            f"tpu_gcells={perks.cells_per_s / 1e9:.0f}")
+    gm = float(np.exp(np.mean(np.log(speedups))))
+    row(f"stencil_{domain_kind}_geomean", 0.0, f"speedup={gm:.2f}x")
+    return gm

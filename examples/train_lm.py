@@ -1,0 +1,75 @@
+"""End-to-end training driver: a ~100M-parameter LM for a few hundred steps
+on the deterministic synthetic pipeline, with checkpoint/restart.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300          # ~100M
+    PYTHONPATH=src python examples/train_lm.py --tiny --steps 200   # CI-sized
+
+Loss falls well below ln(vocab) as the model learns the pipeline's
+structured transitions. Kill and re-run with the same --ckpt-dir to see
+auto-resume; trainer metrics land in the checkpoint dir.
+"""
+import argparse
+import json
+from pathlib import Path
+
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import DataConfig
+from repro.models.lm import Model
+from repro.optim import adamw
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+
+def lm_100m() -> ModelConfig:
+    return ModelConfig(
+        name="lm-100m", family="dense",
+        n_layers=10, d_model=640, n_heads=10, n_kv_heads=5, head_dim=64,
+        d_ff=2560, vocab=50000,
+        act="silu", gated_mlp=True,
+        q_chunk=128, kv_chunk=128, logits_chunk=128,
+    )
+
+
+def lm_tiny() -> ModelConfig:
+    return ModelConfig(
+        name="lm-tiny", family="dense",
+        n_layers=4, d_model=128, n_heads=4, n_kv_heads=2, head_dim=32,
+        d_ff=512, vocab=4096,
+        act="silu", gated_mlp=True,
+        q_chunk=64, kv_chunk=64, logits_chunk=64,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--ckpt-dir", default="runs/train_lm_ckpt")
+    ap.add_argument("--steps-per-dispatch", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = lm_tiny() if args.tiny else lm_100m()
+    model = Model(cfg)
+    print(f"model {cfg.name}: {model.n_params() / 1e6:.1f}M params")
+
+    trainer = Trainer(
+        model,
+        adamw.AdamWConfig(lr=6e-4, warmup_steps=20, total_steps=args.steps),
+        DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                   global_batch=args.batch),
+        TrainerConfig(steps=args.steps, ckpt_dir=args.ckpt_dir,
+                      ckpt_every=50, log_every=10,
+                      steps_per_dispatch=args.steps_per_dispatch),
+    )
+    params, _, step = trainer.run()
+    hist = trainer.history
+    if hist:
+        Path(args.ckpt_dir).mkdir(parents=True, exist_ok=True)
+        (Path(args.ckpt_dir) / "history.json").write_text(json.dumps(hist))
+        print(f"done at step {step}: loss "
+              f"{hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,141 @@
+"""Sharded, atomic, async checkpoints with elastic restore.
+
+Layout:  <dir>/step_<N>/
+            manifest.json       tree structure, shapes, dtypes, user state
+            arr_<k>.npy         one file per leaf (written from the host
+                                view of the global array)
+         <dir>/step_<N>.tmp-*   staging dir, atomically renamed on success
+
+Design points for the 1000-node story (single-process container analogue):
+
+  * **Atomicity** — a checkpoint exists iff the rename committed; torn
+    writes are invisible. ``find_latest`` only sees committed steps.
+  * **Async** — ``save_async`` snapshots to host RAM synchronously (cheap)
+    and writes in a daemon thread; training continues. ``wait`` joins.
+  * **Elastic restore** — manifests store *logical* arrays; ``restore``
+    takes target shardings, so a checkpoint taken on one mesh restores
+    onto any other mesh/devices (tests resize 8 -> 4 fake devices).
+  * **Retention** — ``keep`` newest checkpoints are retained.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import threading
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save(dir_: str | os.PathLike, step: int, tree, *,
+         extra: Optional[dict] = None, keep: int = 3) -> Path:
+    """Synchronous atomic checkpoint of ``tree`` at ``step``."""
+    base = Path(dir_)
+    base.mkdir(parents=True, exist_ok=True)
+    final = base / f"step_{step:08d}"
+    host_leaves = [np.asarray(x) for x in jax.tree.leaves(tree)]
+    return _write(base, final, step, tree, host_leaves, extra, keep)
+
+
+def save_async(dir_: str | os.PathLike, step: int, tree, *,
+               extra: Optional[dict] = None, keep: int = 3) -> threading.Thread:
+    """Snapshot now (device->host copy), write in the background."""
+    base = Path(dir_)
+    base.mkdir(parents=True, exist_ok=True)
+    final = base / f"step_{step:08d}"
+    host_leaves = [np.asarray(x) for x in jax.tree.leaves(tree)]
+
+    t = threading.Thread(
+        target=_write, args=(base, final, step, tree, host_leaves, extra,
+                             keep), daemon=True)
+    t.start()
+    return t
+
+
+def _write(base: Path, final: Path, step: int, tree, host_leaves,
+           extra, keep) -> Path:
+    tmp = Path(tempfile.mkdtemp(prefix=final.name + ".tmp-", dir=base))
+    try:
+        _, treedef = _flatten(tree)
+        manifest = {
+            "step": step,
+            "treedef": str(treedef),
+            "leaves": [
+                {"file": f"arr_{i}.npy", "shape": list(a.shape),
+                 "dtype": str(a.dtype)}
+                for i, a in enumerate(host_leaves)
+            ],
+            "extra": extra or {},
+        }
+        for i, a in enumerate(host_leaves):
+            np.save(tmp / f"arr_{i}.npy", a)
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    _gc(base, keep)
+    return final
+
+
+def _gc(base: Path, keep: int):
+    steps = sorted(p for p in base.glob("step_*") if p.is_dir()
+                   and not p.name.endswith(".tmp"))
+    for p in steps[:-keep] if keep else []:
+        shutil.rmtree(p, ignore_errors=True)
+
+
+def find_latest(dir_: str | os.PathLike) -> Optional[Path]:
+    base = Path(dir_)
+    if not base.exists():
+        return None
+    steps = sorted(p for p in base.glob("step_*")
+                   if p.is_dir() and (p / "manifest.json").exists())
+    return steps[-1] if steps else None
+
+
+def restore(path: str | os.PathLike, target_tree, *,
+            shardings=None) -> tuple[Any, dict]:
+    """Restore into the structure of ``target_tree`` (values ignored).
+
+    ``shardings``: optional matching pytree of Shardings — this is the
+    elastic path: the same checkpoint lands on whatever mesh the new job
+    runs (device_put reshards the logical arrays).
+    Returns (tree, extra).
+    """
+    p = Path(path)
+    manifest = json.loads((p / "manifest.json").read_text())
+    leaves, treedef = _flatten(target_tree)
+    assert len(leaves) == len(manifest["leaves"]), (
+        f"checkpoint has {len(manifest['leaves'])} leaves, "
+        f"target expects {len(leaves)}")
+    arrs = []
+    for i, (leaf, meta) in enumerate(zip(leaves, manifest["leaves"])):
+        a = np.load(p / meta["file"])
+        assert list(a.shape) == meta["shape"]
+        arrs.append(a)
+    if shardings is not None:
+        sh_leaves = jax.tree.leaves(shardings,
+                                    is_leaf=lambda x: hasattr(x, "spec"))
+        arrs = [jax.device_put(a, s) for a, s in zip(arrs, sh_leaves)]
+    else:
+        arrs = [jax.numpy.asarray(a) for a in arrs]
+    return jax.tree_util.tree_unflatten(treedef, arrs), manifest["extra"]
+
+
+def latest_step(dir_: str | os.PathLike) -> Optional[int]:
+    p = find_latest(dir_)
+    if p is None:
+        return None
+    return json.loads((p / "manifest.json").read_text())["step"]

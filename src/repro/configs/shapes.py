@@ -1,0 +1,39 @@
+"""The assignment's input-shape cells and per-arch applicability."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524288, 1),
+}
+
+
+def applicable(cfg: ModelConfig, shape: ShapeCell) -> tuple[bool, str]:
+    """(runnable, reason-if-skipped) per the assignment's skip rules."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("long_500k needs sub-quadratic attention; "
+                       f"{cfg.name} is pure full-attention (see DESIGN.md "
+                       "§Arch-applicability)")
+    return True, ""
+
+
+def all_cells():
+    from repro.configs.registry import ARCHS
+    for arch in ARCHS:
+        for shape in SHAPES.values():
+            yield arch, shape

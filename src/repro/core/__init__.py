@@ -1,0 +1,34 @@
+"""PERKS core: the paper's contribution as composable JAX pieces.
+
+- ``perks``: persistent execution combinators (host_loop / device_loop /
+  resident tiers, chunked sync, donation).
+- ``cache_policy``: what-to-cache planner (greedy traffic-density knapsack).
+- ``perf_model``: paper Eqs. 4-13 projected peak + the TPU three-term roofline.
+- ``hardware``: chip constants (TPU v5e target; A100/V100 for paper checks).
+"""
+from repro.core.perks import (
+    Execution,
+    PerksConfig,
+    persistent,
+    host_loop,
+    device_loop,
+    chunked_loop,
+    scan_loop,
+)
+from repro.core.cache_policy import (
+    CacheableArray,
+    CachePlan,
+    plan_caching,
+    stencil_arrays,
+    cg_arrays,
+)
+from repro.core.perf_model import (
+    PerksProjection,
+    project_perks,
+    project_host_loop,
+    projected_speedup,
+    Roofline,
+    roofline_from_analysis,
+    parse_collectives,
+)
+from repro.core.hardware import Chip, TPU_V5E, A100, V100, CHIPS

@@ -1,0 +1,155 @@
+"""The PERKS caching policy (paper §III-B), made explicit and testable.
+
+Given the set of arrays an iterative solver touches every time step, and an
+on-chip cache budget (VMEM on TPU), decide *what* to keep resident across
+time steps. The paper's ordering, reproduced here:
+
+  1. Data with **no inter-block dependency** (interior of a thread block /
+     interior of a chip's shard): caching saves one load *and* one store
+     per step.
+  2. Data **with inter-block dependency** (shard boundary read by
+     neighbours): caching saves one load per step — the store to main
+     memory must still happen so neighbours can read it.
+  3. **Halo** data (owned by neighbours, refreshed every step): caching
+     saves nothing; never cached.
+
+For multi-array solvers (CG), arrays are ranked by traffic saved per byte
+cached, e.g. residual vector r (3 loads + 1 store per element per step)
+outranks matrix A (1 load) — paper: "ideal cache priority is r > A".
+
+The planner is a greedy fractional knapsack on traffic density, which is
+optimal here because arrays are arbitrarily divisible (we can cache any
+prefix of an array) — matching the paper's finding (§VI-G3) that "a simple
+greedy approach ... gives mostly the best performance".
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheableArray:
+    """One array (or domain region) a solver touches each time step.
+
+    loads/stores are *main-memory accesses per byte per time step* in the
+    non-cached execution. ``inter_block_dep`` marks shard-boundary data whose
+    stores cannot be elided (neighbours read them); ``is_halo`` marks
+    neighbour-owned data that is refreshed every step.
+    """
+
+    name: str
+    bytes: int
+    loads_per_step: float = 1.0
+    stores_per_step: float = 1.0
+    inter_block_dep: bool = False
+    is_halo: bool = False
+
+    def traffic_saved_per_byte(self) -> float:
+        """Main-memory bytes avoided per cached byte per time step."""
+        if self.is_halo:
+            return 0.0
+        if self.inter_block_dep:
+            # the store must still reach main memory for neighbours
+            return self.loads_per_step
+        return self.loads_per_step + self.stores_per_step
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheAssignment:
+    array: CacheableArray
+    cached_bytes: int
+
+    @property
+    def fraction(self) -> float:
+        return self.cached_bytes / self.array.bytes if self.array.bytes else 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class CachePlan:
+    assignments: tuple[CacheAssignment, ...]
+    budget_bytes: int
+
+    @property
+    def cached_bytes(self) -> int:
+        return sum(a.cached_bytes for a in self.assignments)
+
+    @property
+    def traffic_saved_per_step(self) -> float:
+        """Total main-memory bytes avoided per time step under this plan."""
+        return sum(
+            a.cached_bytes * a.array.traffic_saved_per_byte()
+            for a in self.assignments
+        )
+
+    def fraction_of(self, name: str) -> float:
+        for a in self.assignments:
+            if a.array.name == name:
+                return a.fraction
+        return 0.0
+
+
+def plan_caching(
+    arrays: Sequence[CacheableArray],
+    budget_bytes: int,
+    *,
+    reserve_bytes: int = 0,
+) -> CachePlan:
+    """Greedy fractional-knapsack cache plan (the paper's policy).
+
+    ``reserve_bytes`` holds back on-chip memory the kernel itself needs
+    (compute tile, double buffers) — the analogue of the occupancy-reduction
+    analysis that determines how much register/shared memory is *actually*
+    free for caching.
+    """
+    budget = max(0, budget_bytes - reserve_bytes)
+    # stable on ties: preserve caller's order (paper lists r before p/x)
+    ranked = [
+        a
+        for _, _, a in sorted(
+            (-a.traffic_saved_per_byte(), i, a)
+            for i, a in enumerate(arrays)
+            if a.traffic_saved_per_byte() > 0.0
+        )
+    ]
+    assignments = []
+    remaining = budget
+    for arr in ranked:
+        take = min(arr.bytes, remaining)
+        if take <= 0:
+            break
+        assignments.append(CacheAssignment(arr, take))
+        remaining -= take
+    return CachePlan(tuple(assignments), budget)
+
+
+def stencil_arrays(
+    interior_bytes: int,
+    boundary_bytes: int,
+    halo_bytes: int,
+) -> list[CacheableArray]:
+    """Cacheable regions of a stencil shard, per paper §III-B1."""
+    return [
+        CacheableArray("interior", interior_bytes, 1.0, 1.0, inter_block_dep=False),
+        CacheableArray("boundary", boundary_bytes, 1.0, 1.0, inter_block_dep=True),
+        CacheableArray("halo", halo_bytes, 1.0, 0.0, is_halo=True),
+    ]
+
+
+def cg_arrays(n_rows: int, nnz: int, dtype_bytes: int, index_bytes: int = 4) -> list[CacheableArray]:
+    """Cacheable arrays of the PERKS conjugate-gradient solver (§III-B2).
+
+    Per CG iteration (see solvers/cg.py): the residual r is read by the
+    dot products and axpy updates (3 loads) and written once; p and x and
+    Ap similar; the matrix A is read once and never written. The paper
+    singles out r (3 loads + 1 store) > A (1 load); we enumerate all of
+    them so the planner can fill remaining budget the way Fig. 9's MIX does.
+    """
+    vec = n_rows * dtype_bytes
+    return [
+        CacheableArray("r", vec, 3.0, 1.0),
+        CacheableArray("p", vec, 3.0, 1.0),
+        CacheableArray("x", vec, 1.0, 1.0),
+        CacheableArray("Ap", vec, 2.0, 1.0),
+        CacheableArray("A", nnz * (dtype_bytes + index_bytes), 1.0, 0.0),
+    ]

@@ -1,0 +1,81 @@
+"""Hardware constants used by the cache policy and the performance models.
+
+The TPU v5e numbers are the assignment-specified target; the GPU entries
+mirror Table I of the paper and are used only by the paper-fidelity
+performance-model checks.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+GiB = 1024**3
+MiB = 1024**2
+
+
+@dataclasses.dataclass(frozen=True)
+class Chip:
+    """Per-chip capabilities relevant to the PERKS model and the roofline."""
+
+    name: str
+    # Peak dense compute (FLOP/s). For v5e this is the bf16 MXU peak.
+    peak_flops: float
+    # Main-memory (HBM / device-memory) bandwidth, bytes/s.
+    hbm_bw: float
+    # HBM capacity in bytes.
+    hbm_bytes: float
+    # Fast on-chip memory capacity usable for PERKS caching, bytes.
+    #   GPU: register file + shared memory (paper Table I).
+    #   TPU: VMEM.
+    onchip_bytes: float
+    # On-chip memory bandwidth, bytes/s (shared-memory BW / VMEM BW).
+    onchip_bw: float
+    # Inter-chip interconnect bandwidth per link, bytes/s (ICI for TPU).
+    ici_bw_per_link: float = 0.0
+    # Number of ICI links per chip participating in a collective (torus).
+    ici_links: int = 1
+
+
+# Assignment-mandated target. 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link.
+# VMEM on v5e is 128 MiB per TensorCore; VMEM bandwidth is taken as ~22x the
+# HBM bandwidth (consistent with public Mosaic/TPU guidance of O(10 TB/s)).
+TPU_V5E = Chip(
+    name="tpu_v5e",
+    peak_flops=197e12,
+    hbm_bw=819e9,
+    hbm_bytes=16 * GiB,
+    onchip_bytes=128 * MiB,
+    onchip_bw=18e12,
+    ici_bw_per_link=50e9,
+    ici_links=4,  # 2D torus on v5e: 4 links (+x,-x,+y,-y)
+)
+
+# Paper Table I (used to sanity-check the reproduced performance model
+# against the paper's own worked examples in Section IV-B).
+A100 = Chip(
+    name="a100",
+    peak_flops=19.5e12,             # fp64 tensor? paper uses mem-bound only
+    hbm_bw=1555e9,
+    hbm_bytes=40 * GiB,
+    onchip_bytes=(27 + 17.29) * MiB,  # register file + shared memory
+    onchip_bw=19.4e12,              # ~108 SMX * 128 B/clk * 1.41 GHz
+    ici_bw_per_link=0.0,
+)
+
+V100 = Chip(
+    name="v100",
+    peak_flops=7.8e12,
+    hbm_bw=900e9,
+    hbm_bytes=16 * GiB,
+    onchip_bytes=(20 + 7.5) * MiB,
+    onchip_bw=13.7e12,
+    ici_bw_per_link=0.0,
+)
+
+CHIPS = {c.name: c for c in (TPU_V5E, A100, V100)}
+
+
+def vmem_cache_budget(chip: Chip, working_set_bytes: float) -> float:
+    """On-chip bytes available for PERKS caching after the kernel's own
+    working set (paper: "unused registers + shared memory"; TPU: VMEM not
+    needed by the compute tile double-buffers)."""
+    return max(0.0, chip.onchip_bytes - working_set_bytes)

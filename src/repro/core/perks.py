@@ -1,0 +1,193 @@
+"""PERKS: the persistent execution model, as composable JAX combinators.
+
+The paper's contribution is an *execution scheme*, not a solver: take an
+iterative method ``x_{k+1} = F(x_k)`` whose reference GPU implementation is
+
+    host loop:  for k in range(N):  launch kernel F   (barrier = relaunch)
+
+and transform it so the time loop lives on the device, with the inter-step
+state held in on-chip memory instead of round-tripping through device memory.
+
+On TPU/JAX this maps to three execution tiers (see DESIGN.md §2):
+
+``HOST_LOOP``
+    The baseline: one ``jit`` dispatch per time step. Inter-step state is
+    materialised in HBM between dispatches and every step re-reads it —
+    exactly the CUDA host-side loop of Fig. 3 (left).
+
+``DEVICE_LOOP``
+    The time loop is moved inside a single ``jit`` region as a
+    ``lax.fori_loop``/``lax.scan`` with **donated** carries. One dispatch for
+    all N steps; XLA keeps the carry in place (no dispatch overhead, no
+    host sync, buffer reuse). This is the PERKS *control-flow* transform;
+    on TPU it alone removes the per-step launch + output re-load that the
+    paper attributes to kernel termination.
+
+``RESIDENT``
+    The full PERKS scheme: the step function is a Pallas kernel whose body
+    contains the time loop, with the (subset of the) domain pinned in VMEM
+    ``scratch_shapes`` across iterations — HBM is touched only for the
+    initial load, the final store, and the per-step halo/uncached traffic.
+    Kernels under ``repro.kernels`` implement this tier.
+
+All tiers compute bit-identical results for the same step function (the
+barrier semantics of the host loop are preserved: step k+1 only ever sees
+completed step-k output), which the test-suite asserts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import functools
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+class Execution(enum.Enum):
+    HOST_LOOP = "host_loop"      # paper's baseline (one launch per step)
+    DEVICE_LOOP = "device_loop"  # time loop fused into one jit region
+    RESIDENT = "resident"        # Pallas kernel w/ VMEM-resident domain
+
+
+@dataclasses.dataclass(frozen=True)
+class PerksConfig:
+    """Knobs of the persistent execution scheme.
+
+    Attributes:
+      execution: which tier to run (see module docstring).
+      sync_every: fuse this many time steps per device dispatch, returning to
+        the host in between (PERKS with periodic host sync — used for e.g.
+        convergence checks in CG; ``None`` fuses all steps).
+      donate: donate the state buffers to each dispatch. Donation is what
+        lets XLA update the domain in place instead of allocating a fresh
+        output each step — the DEVICE_LOOP analogue of "the kernel never
+        terminates so its buffers never die".
+    """
+
+    execution: Execution = Execution.DEVICE_LOOP
+    sync_every: Optional[int] = None
+    donate: bool = True
+
+
+StepFn = Callable[[Any], Any]  # state -> state
+
+
+def _jit_step(step_fn: StepFn, donate: bool):
+    return jax.jit(step_fn, donate_argnums=(0,) if donate else ())
+
+
+def _own(state):
+    """Defensive copy of the initial state so donation never invalidates
+    caller-held buffers (and duplicate leaves never double-donate)."""
+    return jax.tree.map(
+        lambda a: a.copy() if isinstance(a, jax.Array) else a, state)
+
+
+def host_loop(step_fn: StepFn, n_steps: int, *, donate: bool = True) -> Callable[[Any], Any]:
+    """Baseline execution: one device dispatch per time step.
+
+    Mirrors the traditional CUDA pattern: kernel termination is the barrier,
+    and the domain is re-read from main memory at every step.
+    """
+    jitted = _jit_step(step_fn, donate)
+
+    def run(state):
+        if donate:
+            state = _own(state)
+        for _ in range(n_steps):
+            state = jitted(state)
+        return state
+
+    return run
+
+
+def device_loop(step_fn: StepFn, n_steps: int, *, donate: bool = True) -> Callable[[Any], Any]:
+    """PERKS control-flow transform: the whole time loop in one dispatch.
+
+    ``grid.sync()`` of the paper corresponds to the loop-carried data
+    dependency: iteration k+1 of ``fori_loop`` cannot start before iteration
+    k's state is complete. Across a mesh the dependency is carried by
+    whatever collective the step function performs (halo exchange, psum),
+    which is exactly the device-wide barrier semantics PERKS relies on.
+    """
+
+    def run_all(state):
+        return jax.lax.fori_loop(0, n_steps, lambda _, s: step_fn(s), state)
+
+    jitted = jax.jit(run_all, donate_argnums=(0,) if donate else ())
+    return (lambda state: jitted(_own(state))) if donate else jitted
+
+
+def chunked_loop(
+    step_fn: StepFn,
+    n_steps: int,
+    *,
+    sync_every: int,
+    donate: bool = True,
+    on_sync: Optional[Callable[[Any, int], bool]] = None,
+) -> Callable[[Any], Any]:
+    """PERKS with periodic host synchronisation.
+
+    Fuses ``sync_every`` steps per dispatch and calls ``on_sync(state, k)``
+    between dispatches (e.g. a CG convergence check); returning True stops
+    early. This matches how a production PERKS solver is actually run: the
+    persistent kernel owns the inner loop, the host owns termination.
+    """
+    inner = device_loop(step_fn, sync_every, donate=donate)
+
+    def run(state):
+        if donate:
+            state = _own(state)
+        done = 0
+        while done < n_steps:
+            state = inner(state)
+            done += sync_every
+            if on_sync is not None and on_sync(state, done):
+                break
+        return state
+
+    return run
+
+
+def persistent(
+    step_fn: StepFn,
+    n_steps: int,
+    config: PerksConfig = PerksConfig(),
+    *,
+    on_sync: Optional[Callable[[Any, int], bool]] = None,
+) -> Callable[[Any], Any]:
+    """Build a runner for ``n_steps`` applications of ``step_fn`` under the
+    requested execution tier. The RESIDENT tier is kernel-specific and is
+    selected by passing a step function that already wraps a resident Pallas
+    kernel (see ``repro.kernels.ops``); at this level it behaves like
+    DEVICE_LOOP with ``sync_every`` = kernel's fused step count.
+    """
+    if config.execution == Execution.HOST_LOOP:
+        return host_loop(step_fn, n_steps, donate=config.donate)
+    if config.sync_every is not None and config.sync_every < n_steps:
+        return chunked_loop(
+            step_fn, n_steps, sync_every=config.sync_every,
+            donate=config.donate, on_sync=on_sync,
+        )
+    return device_loop(step_fn, n_steps, donate=config.donate)
+
+
+def scan_loop(
+    step_fn: Callable[[Any, Any], tuple[Any, Any]],
+    n_steps: int,
+    *,
+    donate: bool = True,
+) -> Callable[[Any], tuple[Any, Any]]:
+    """Like ``device_loop`` but for steps with per-step outputs (lax.scan).
+
+    Used by the persistent decode loop (per-token sampled ids are stacked
+    outputs) and by trainers that fuse K optimizer steps per dispatch.
+    """
+
+    def run_all(state):
+        return jax.lax.scan(lambda s, _: step_fn(s, None), state, None, length=n_steps)
+
+    jitted = jax.jit(run_all, donate_argnums=(0,) if donate else ())
+    return (lambda state: jitted(_own(state))) if donate else jitted

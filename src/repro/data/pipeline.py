@@ -1,0 +1,97 @@
+"""Deterministic, shardable synthetic token pipeline.
+
+Production properties the trainer/tests rely on:
+
+  * **Stateless addressing** — batch ``i`` is a pure function of
+    (seed, step, host). Any host can regenerate any shard: restarts,
+    elastic resizes and straggler re-assignment need no data coordination.
+  * **Checkpointable state** — the pipeline state is just the step counter
+    (stored in every checkpoint manifest).
+  * **Prefetch** — a double-buffered background thread hides host-side
+    generation latency (straggler mitigation at the input layer).
+
+The token distribution is a fixed-seed Markov-ish mix with enough structure
+for a ~100M-param model's loss to fall measurably in a few hundred steps
+(examples/train_lm.py): token t+1 correlates with token t through a hashed
+transition plus noise.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Iterator, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    structure: float = 0.75   # P(structured transition) vs uniform noise
+
+
+def _rng_for(cfg: DataConfig, step: int, host: int) -> np.random.Generator:
+    return np.random.default_rng(
+        np.random.SeedSequence([cfg.seed, step, host]))
+
+
+def synth_batch(cfg: DataConfig, step: int, *, host: int = 0,
+                n_hosts: int = 1) -> np.ndarray:
+    """Tokens (global_batch/n_hosts, seq_len) int32 for this host's shard."""
+    assert cfg.global_batch % n_hosts == 0
+    b = cfg.global_batch // n_hosts
+    rng = _rng_for(cfg, step, host)
+    v = cfg.vocab
+    # deterministic "transition table" shared by all steps: next ~ hash(cur)
+    cur = rng.integers(0, v, size=(b, 1), dtype=np.int64)
+    rows = [cur]
+    noise = rng.random((b, cfg.seq_len - 1))
+    rand_next = rng.integers(0, v, size=(b, cfg.seq_len - 1), dtype=np.int64)
+    a, c = 1103515245, 12345
+    for t in range(cfg.seq_len - 1):
+        structured = (rows[-1][:, 0] * a + c) % v
+        nxt = np.where(noise[:, t] < cfg.structure, structured,
+                       rand_next[:, t])
+        rows.append(nxt[:, None])
+    return np.concatenate(rows, axis=1).astype(np.int32)
+
+
+class Prefetcher:
+    """Background-thread double buffering over ``synth_batch``."""
+
+    def __init__(self, cfg: DataConfig, start_step: int = 0, *,
+                 host: int = 0, n_hosts: int = 1, depth: int = 2):
+        self.cfg = cfg
+        self.host, self.n_hosts = host, n_hosts
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._step = start_step
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._work, daemon=True)
+        self._thread.start()
+
+    def _work(self):
+        step = self._step
+        while not self._stop.is_set():
+            batch = synth_batch(self.cfg, step, host=self.host,
+                                n_hosts=self.n_hosts)
+            try:
+                self._q.put((step, batch), timeout=0.5)
+                step += 1
+            except queue.Full:
+                continue
+
+    def next(self) -> tuple[int, np.ndarray]:
+        return self._q.get()
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=2)

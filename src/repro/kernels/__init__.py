@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+The paper optimizes iterative memory-bound loops; its hot spots here are:
+
+- ``stencil2d``/``stencil3d`` — PERKS stencils: in-kernel time loop, domain
+  (or a row/plane subset) resident in VMEM across steps.
+- ``spmv_ell`` — block-ELL SpMV (TPU-native stand-in for merge-based CSR).
+- ``cg_fused`` — the PERKS conjugate gradient: the whole CG loop in one
+  kernel, x/r/p vectors VMEM-resident, matrix resident or streamed.
+- ``ssm_scan`` — Mamba2 SSD chunk scan, SSM state resident across chunks.
+- ``decode_attn`` — flash-decode GQA attention (online-softmax carry
+  resident while the KV cache streams through VMEM).
+
+``ops.py`` holds the jit'd public wrappers (interpret-mode off-TPU);
+``ref.py`` the pure-jnp oracles every kernel is tested against.
+"""
+from repro.kernels.common import StencilSpec, BENCHMARKS, get_spec

@@ -1,0 +1,134 @@
+"""Shared kernel machinery: stencil specifications (Table III of the paper).
+
+A ``StencilSpec`` is a pure description — offsets + weights — consumed by
+the Pallas kernels (``stencil2d.py``/``stencil3d.py``), the jnp oracles
+(``ref.py``) and the system-level solvers (``solvers/stencil.py``).
+
+Boundary semantics used everywhere in this repo: the outermost ``radius``
+cells of the domain are Dirichlet (frozen); only the interior is updated.
+This matches how the halo region is treated in the paper (never cached,
+never updated by the owning kernel).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Sequence
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class StencilSpec:
+    name: str
+    ndim: int
+    offsets: tuple[tuple[int, ...], ...]
+    weights: tuple[float, ...]
+
+    def __post_init__(self):
+        assert len(self.offsets) == len(self.weights)
+        assert all(len(o) == self.ndim for o in self.offsets)
+
+    @property
+    def radius(self) -> int:
+        return max(max(abs(c) for c in o) for o in self.offsets)
+
+    @property
+    def npoints(self) -> int:
+        return len(self.offsets)
+
+    @property
+    def flops_per_cell(self) -> int:
+        # one multiply + one add per point (paper Table III convention)
+        return 2 * self.npoints
+
+    # -- compute helpers (pure jnp; usable inside Pallas kernel bodies) -----
+
+    def apply_rows(self, x, lo: int, hi: int):
+        """Updated values of leading-axis rows [lo, hi) of ``x``.
+
+        ``x`` must contain rows [lo - radius, hi + radius). Non-leading-axis
+        borders are frozen (copied through from ``x``). ``lo``/``hi`` are
+        static Python ints, so all slices are static.
+        """
+        r = self.radius
+        acc = None
+        for off, w in zip(self.offsets, self.weights):
+            d0, rest = off[0], off[1:]
+            idx = [slice(lo + d0, hi + d0 if hi + d0 != 0 else None)]
+            for ax, d in enumerate(rest):
+                n = x.shape[1 + ax]
+                idx.append(slice(r + d, n - r + d))
+            term = w * x[tuple(idx)]
+            acc = term if acc is None else acc + term
+        out = x[lo:hi]
+        interior = tuple([slice(None)] + [slice(r, x.shape[1 + ax] - r)
+                                          for ax in range(self.ndim - 1)])
+        return out.at[interior].set(acc.astype(x.dtype))
+
+    def apply(self, x):
+        """One full time step: interior updated, global border frozen."""
+        r = self.radius
+        upd = self.apply_rows(x, r, x.shape[0] - r)
+        return x.at[r:x.shape[0] - r].set(upd)
+
+
+def _star(ndim: int, radius: int) -> list[tuple[int, ...]]:
+    offs = [tuple([0] * ndim)]
+    for ax in range(ndim):
+        for d in range(1, radius + 1):
+            for s in (-d, d):
+                o = [0] * ndim
+                o[ax] = s
+                offs.append(tuple(o))
+    return offs
+
+
+def _box(ndim: int, radius: int) -> list[tuple[int, ...]]:
+    return list(itertools.product(range(-radius, radius + 1), repeat=ndim))
+
+
+def _poisson3d() -> list[tuple[int, ...]]:
+    """Classic 19-point 3D Poisson stencil: 3x3x3 cube minus the 8 corners."""
+    return [o for o in _box(3, 1) if sum(abs(c) for c in o) <= 2]
+
+
+def _3d17pt() -> list[tuple[int, ...]]:
+    """A fixed symmetric 17-point stencil: r=1 star (7) + 4 xy-diagonals +
+    r=2 axis points (6). Point count follows the paper's Table III; the
+    exact geometry is not specified there, and any fixed 17-point stencil
+    exercises the same per-cell traffic."""
+    offs = _star(3, 1)
+    offs += [(0, 1, 1), (0, 1, -1), (0, -1, 1), (0, -1, -1)]
+    offs += [(2, 0, 0), (-2, 0, 0), (0, 2, 0), (0, -2, 0), (0, 0, 2), (0, 0, -2)]
+    return offs
+
+
+def _mk(name: str, ndim: int, offsets: Sequence[tuple[int, ...]]) -> StencilSpec:
+    n = len(offsets)
+    # Jacobi-style averaging weights: spectrally stable over thousands of
+    # steps, so long-horizon tests don't overflow.
+    w = tuple(1.0 / n for _ in offsets)
+    return StencilSpec(name, ndim, tuple(offsets), w)
+
+
+# Table III of the paper: benchmark(stencil order, flops/cell).
+BENCHMARKS: dict[str, StencilSpec] = {
+    "2d5pt": _mk("2d5pt", 2, _star(2, 1)),
+    "2ds9pt": _mk("2ds9pt", 2, _star(2, 2)),
+    "2d13pt": _mk("2d13pt", 2, _star(2, 3)),
+    "2d17pt": _mk("2d17pt", 2, _star(2, 4)),
+    "2d21pt": _mk("2d21pt", 2, _star(2, 5)),
+    "2ds25pt": _mk("2ds25pt", 2, _star(2, 6)),
+    "2d9pt": _mk("2d9pt", 2, _box(2, 1)),
+    "2d25pt": _mk("2d25pt", 2, _box(2, 2)),
+    "3d7pt": _mk("3d7pt", 3, _star(3, 1)),
+    "3d13pt": _mk("3d13pt", 3, _star(3, 2)),
+    "3d17pt": _mk("3d17pt", 3, _3d17pt()),
+    "3d27pt": _mk("3d27pt", 3, _box(3, 1)),
+    "poisson": _mk("poisson", 3, _poisson3d()),
+}
+
+
+def get_spec(name: str) -> StencilSpec:
+    return BENCHMARKS[name]

@@ -1,0 +1,73 @@
+"""Jit'd public wrappers for every Pallas kernel in this package.
+
+On TPU these dispatch the compiled Mosaic kernels; on any other backend
+(this CPU container) they run the same kernel bodies in interpret mode —
+the tests validate them there against the ``ref.py`` oracles. Model code
+and solvers call through these wrappers only.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.common import StencilSpec, get_spec
+from repro.kernels import stencil2d as _s2d
+from repro.kernels import spmv_ell as _spmv
+from repro.kernels import cg_fused as _cg
+from repro.kernels import ssm_scan as _ssm
+from repro.kernels import decode_attn as _da
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "steps"))
+def stencil_resident(x, *, spec: StencilSpec, steps: int):
+    """Small-domain PERKS stencil (whole domain VMEM-resident)."""
+    return _s2d.stencil_resident(x, spec, steps=steps)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("spec", "steps", "cached_rows", "sub_rows"))
+def stencil_perks(x, *, spec: StencilSpec, steps: int, cached_rows: int,
+                  sub_rows: int = 128):
+    """Large-domain PERKS stencil (partial VMEM residency, rest streamed).
+    The kernel updates the domain in place through an input/output alias;
+    the wrapper does not donate, so callers keep their buffers (XLA inserts
+    the one defensive copy)."""
+    return _s2d.stencil_perks(x, spec, steps=steps, cached_rows=cached_rows,
+                              sub_rows=sub_rows)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "sub_rows"))
+def stencil_baseline_step(x, *, spec: StencilSpec, sub_rows: int = 128):
+    """One non-persistent stencil step (host-loop baseline kernel)."""
+    return _s2d.stencil_baseline_step(x, spec, sub_rows=sub_rows)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def spmv(data, cols, x, *, block_rows: int = 256):
+    """Block-ELL SpMV with the dense vector VMEM-resident."""
+    return _spmv.spmv_ell(data, cols, x, block_rows=block_rows)
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "resident_matrix", "block_rows"))
+def cg(data, cols, b, *, iters: int, resident_matrix: bool = True,
+       block_rows: int = 256):
+    """PERKS conjugate gradient: whole iteration loop in one kernel."""
+    return _cg.cg_fused(data, cols, b, iters=iters,
+                        resident_matrix=resident_matrix, block_rows=block_rows)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(x, dt, a, b, c, d, *, chunk: int = 128):
+    """Batched Mamba2 SSD scan; batch handled by vmap over the PERKS kernel.
+    x (B,T,H,P), dt (B,T,H), a (H,), b/c (B,T,N), d (H,) -> y (B,T,H,P)."""
+    f = functools.partial(_ssm.ssm_scan, chunk=chunk)
+    return jax.vmap(f, in_axes=(0, 0, None, 0, 0, None))(x, dt, a, b, c, d)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s",))
+def decode_attention(q, k, v, *, block_s: int = 512):
+    """Flash-decode GQA attention against a full KV cache."""
+    return _da.decode_attention(q, k, v, block_s=block_s)

@@ -1,0 +1,127 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernel tests ``assert_allclose`` against,
+and the implementations the models fall back to off-TPU (robust HLO for the
+dry-run). No Pallas, no scratch, no DMA — just jnp.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import StencilSpec
+
+
+# -- stencils ---------------------------------------------------------------
+
+def stencil_step(x: jax.Array, spec: StencilSpec) -> jax.Array:
+    """One time step: interior updated, outermost ``radius`` cells frozen."""
+    return spec.apply(x)
+
+
+def stencil_run(x: jax.Array, spec: StencilSpec, steps: int) -> jax.Array:
+    """``steps`` time steps via lax.scan (oracle for the PERKS kernels)."""
+    def body(s, _):
+        return spec.apply(s), None
+    y, _ = jax.lax.scan(body, x, None, length=steps)
+    return y
+
+
+# -- block-ELL SpMV ----------------------------------------------------------
+
+def spmv_ell(data: jax.Array, cols: jax.Array, x: jax.Array) -> jax.Array:
+    """y = A @ x for A in ELL format.
+
+    data: (n_rows, K) padded per-row nonzeros (0.0 in padding slots)
+    cols: (n_rows, K) column indices (0 in padding slots — padding
+          contributes data * x[0] * 0 = 0)
+    """
+    return jnp.sum(data * x[cols], axis=1)
+
+
+# -- conjugate gradient (one iteration; fused-kernel oracle runs many) -------
+
+def _safe_div(a, b):
+    """a/b with 0 when b underflows — keeps fully-converged CG iterations
+    (rr -> exact 0 in f32) as fixed points instead of NaNs."""
+    return jnp.where(jnp.abs(b) > 0, a / jnp.where(b == 0, 1.0, b), 0.0)
+
+
+def cg_iteration(state, data, cols):
+    """One textbook CG iteration on ELL-format A. state = (x, r, p, rr)."""
+    x, r, p, rr = state
+    ap = spmv_ell(data, cols, p)
+    alpha = _safe_div(rr, jnp.vdot(p, ap))
+    x = x + alpha * p
+    r = r - alpha * ap
+    rr_new = jnp.vdot(r, r)
+    beta = _safe_div(rr_new, rr)
+    p = r + beta * p
+    return (x, r, p, rr_new)
+
+
+def cg_run(data, cols, b, iters: int):
+    """`iters` CG iterations from x0 = 0 (oracle for kernels/cg_fused)."""
+    x0 = jnp.zeros_like(b)
+    r0 = b
+    state = (x0, r0, r0, jnp.vdot(r0, r0))
+    def body(s, _):
+        return cg_iteration(s, data, cols), None
+    (x, r, p, rr), _ = jax.lax.scan(body, state, None, length=iters)
+    return x, rr
+
+
+# -- Mamba2 / SSD scan --------------------------------------------------------
+
+def ssm_scan(x, dt, a, b, c, d):
+    """Selective-state-space (Mamba2 SSD) reference via per-step recurrence.
+
+    Shapes (single sequence):
+      x:  (T, H, P)   per-head inputs (P = head dim)
+      dt: (T, H)      softplus-activated step sizes
+      a:  (H,)        per-head decay (negative)
+      b:  (T, N)      input projection (shared across heads, ngroups=1)
+      c:  (T, N)      output projection
+      d:  (H,)        skip connection
+    Returns y: (T, H, P).
+
+    Recurrence per head h:
+      h_t = exp(dt_t * a_h) * h_{t-1} + dt_t * outer(b_t, x_t)
+      y_t = c_t @ h_t + d_h * x_t
+    """
+    T, H, P = x.shape
+    N = b.shape[-1]
+
+    def step(h_state, inputs):
+        xt, dtt, bt, ct = inputs          # (H,P), (H,), (N,), (N,)
+        decay = jnp.exp(dtt * a)          # (H,)
+        upd = dtt[:, None, None] * bt[None, :, None] * xt[:, None, :]  # (H,N,P)
+        h_state = decay[:, None, None] * h_state + upd
+        yt = jnp.einsum("n,hnp->hp", ct, h_state) + d[:, None] * xt
+        return h_state, yt
+
+    h0 = jnp.zeros((H, N, P), x.dtype)
+    _, y = jax.lax.scan(step, h0, (x, dt, b, c))
+    return y
+
+
+# -- decode attention ---------------------------------------------------------
+
+def decode_attention(q, k, v, *, length=None):
+    """Single-token GQA attention against a KV cache (oracle).
+
+    q: (B, Hq, D); k, v: (B, S, Hkv, D); Hq % Hkv == 0.
+    ``length``: optional (B,) valid-prefix lengths (rest masked).
+    Returns (B, Hq, D).
+    """
+    B, Hq, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    qg = q.reshape(B, Hkv, g, D)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qg, k) / jnp.sqrt(D).astype(q.dtype)
+    if length is not None:
+        mask = jnp.arange(S)[None, :] < length[:, None]          # (B, S)
+        logits = jnp.where(mask[:, None, None, :], logits, -jnp.inf)
+    w = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgs,bskd->bkgd", w, v)
+    return out.reshape(B, Hq, D)

@@ -1,0 +1,109 @@
+"""Block-ELL SpMV: the TPU-native replacement for merge-based CSR SpMV.
+
+The paper's CG solver uses Merrill & Garland's merge-based SpMV, which load-
+balances CSR by giving every CUDA thread an equal share of the (row_ptr,
+nnz) merge path via per-thread binary search. That mechanism is built on
+per-lane divergent control flow — it has no analogue on a TPU's vector/
+systolic datapath (DESIGN.md §2). The TPU-idiomatic equivalent:
+
+  * pad each row to a fixed ``K`` slots (ELL format) — static shapes do the
+    load-balancing that merge-path did dynamically;
+  * tile rows into blocks of ``bm``; stream ``(bm, K)`` coefficient/index
+    blocks HBM->VMEM;
+  * keep the **dense vector x resident in VMEM** across all row blocks —
+    this is the PERKS caching decision (vector > matrix, paper §III-B2):
+    x is read K times per row (gather) while A is read once.
+
+The gather ``x[cols]`` lowers to a VMEM dynamic-gather on TPU (supported by
+Mosaic for 32-bit types); the oracle in ``ref.py`` is identical math.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _spmv_kernel(data_ref, cols_ref, x_ref, y_ref):
+    """One row block: y[block] = sum_k data[:, k] * x[cols[:, k]]."""
+    x = x_ref[...]
+    gathered = x[cols_ref[...]]          # (bm, K) gather from resident x
+    y_ref[...] = jnp.sum(data_ref[...] * gathered, axis=1)
+
+
+def spmv_ell(
+    data: jax.Array,
+    cols: jax.Array,
+    x: jax.Array,
+    *,
+    block_rows: int = 256,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """y = A @ x, A in ELL format: data/cols (n_rows, K), x (n,).
+
+    Rows are streamed in blocks; x stays VMEM-resident for the whole call
+    (every grid step maps the full x into VMEM — Pallas keeps it there
+    because the block index is constant).
+    """
+    n_rows, k = data.shape
+    assert cols.shape == (n_rows, k)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    bm = min(block_rows, n_rows)
+    assert n_rows % bm == 0, "pad n_rows to a multiple of block_rows"
+    grid = (n_rows // bm,)
+    return pl.pallas_call(
+        _spmv_kernel,
+        grid=grid,
+        out_shape=jax.ShapeDtypeStruct((n_rows,), x.dtype),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0), memory_space=pltpu.VMEM),
+            pl.BlockSpec((bm, k), lambda i: (i, 0), memory_space=pltpu.VMEM),
+            pl.BlockSpec((x.shape[0],), lambda i: (0,), memory_space=pltpu.VMEM),
+        ],
+        out_specs=pl.BlockSpec((bm,), lambda i: (i,), memory_space=pltpu.VMEM),
+        interpret=interpret,
+    )(data, cols, x)
+
+
+# -- host-side ELL construction helpers (numpy; data-prep, not hot path) ----
+
+def dense_to_ell(a: np.ndarray, k: Optional[int] = None):
+    """Convert a dense matrix to ELL (data, cols) with per-row padding."""
+    n = a.shape[0]
+    nnz_per_row = (a != 0).sum(axis=1)
+    k = int(nnz_per_row.max()) if k is None else k
+    data = np.zeros((n, k), a.dtype)
+    cols = np.zeros((n, k), np.int32)
+    for i in range(n):
+        idx = np.nonzero(a[i])[0][:k]
+        data[i, : len(idx)] = a[i, idx]
+        cols[i, : len(idx)] = idx
+    return data, cols
+
+
+def poisson2d_ell(side: int, dtype=np.float32):
+    """ELL form of the 2D 5-point Poisson matrix on a side x side grid —
+    the canonical SPD test operator (the paper's CG datasets are SPD)."""
+    n = side * side
+    k = 5
+    data = np.zeros((n, k), dtype)
+    cols = np.zeros((n, k), np.int32)
+    for r in range(side):
+        for c in range(side):
+            i = r * side + c
+            slot = 0
+            data[i, slot] = 4.0
+            cols[i, slot] = i
+            slot += 1
+            for rr, cc in ((r - 1, c), (r + 1, c), (r, c - 1), (r, c + 1)):
+                if 0 <= rr < side and 0 <= cc < side:
+                    data[i, slot] = -1.0
+                    cols[i, slot] = rr * side + cc
+                    slot += 1
+    return data, cols

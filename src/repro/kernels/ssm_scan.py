@@ -1,0 +1,111 @@
+"""Mamba2 SSD chunk scan as a PERKS kernel: the SSM state never leaves VMEM.
+
+The SSD recurrence is *literally* the paper's Eq. 1 — ``h_{t+1} = F(h_t)``
+iterated along the sequence — and the baseline execution materialises the
+inter-chunk state to HBM between chunk kernels. Here the chunk loop is the
+Pallas grid (sequential on a TensorCore) and the state ``h`` lives in a VMEM
+scratch accumulator that persists across grid steps: HBM sees x/B/C/dt
+streamed in once and y streamed out once; the state pays zero HBM traffic.
+
+Math (per head h; chunk length C; cum[i] = sum_{k<=i} dt_k * a_h):
+
+  intra:  y[i] += sum_{j<=i} e^{cum[i]-cum[j]} dt_j (c_i . b_j) x_j
+  cross:  y[i] += e^{cum[i]} c_i . h_prev
+  state:  h    = e^{cum[C-1]} h_prev
+               + sum_j e^{cum[C-1]-cum[j]} dt_j outer(b_j, x_j)
+  skip:   y[i] += d_h * x[i]
+
+Oracle: ``repro.kernels.ref.ssm_scan`` (plain per-step recurrence).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref, h_s):
+    c_idx = pl.program_id(0)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        h_s[...] = jnp.zeros_like(h_s)
+
+    x = x_ref[...].astype(jnp.float32)      # (C, H, P)
+    dt = dt_ref[...].astype(jnp.float32)    # (C, H)
+    a = a_ref[...].astype(jnp.float32)      # (H,)
+    b = b_ref[...].astype(jnp.float32)      # (C, N)
+    c = c_ref[...].astype(jnp.float32)      # (C, N)
+    d = d_ref[...].astype(jnp.float32)      # (H,)
+
+    g = dt * a[None, :]                     # (C, H) log-decay per step
+    cum = jnp.cumsum(g, axis=0)             # (C, H) inclusive
+
+    # intra-chunk (quadratic in C, runs on the MXU). Mask BEFORE exp:
+    # the upper triangle has cum[i]-cum[j] > 0 which overflows exp for
+    # long chunks; masking after would give inf * 0 = NaN.
+    scores = c @ b.T                        # (C, C)  c_i . b_j
+    li = cum[:, None, :] - cum[None, :, :]  # (C, C, H) cum[i]-cum[j]
+    causal = jnp.tril(jnp.ones((x.shape[0], x.shape[0]), bool))
+    li = jnp.where(causal[:, :, None], li, -jnp.inf)
+    m = jnp.exp(li) * scores[:, :, None] * dt[None, :, :]  # (i,j,H)
+    y = jnp.einsum("ijh,jhp->ihp", m, x)
+
+    # cross-chunk from the resident state
+    h_prev = h_s[...]                       # (H, N, P)
+    y += jnp.exp(cum)[:, :, None] * jnp.einsum("in,hnp->ihp", c, h_prev)
+
+    # skip connection
+    y += d[None, :, None] * x
+
+    # state update (stays in VMEM)
+    tail = jnp.exp(cum[-1][None, :] - cum)  # (C, H) e^{cum[C-1]-cum[j]}
+    upd = jnp.einsum("jh,jn,jhp->hnp", tail * dt, b, x)
+    h_s[...] = jnp.exp(cum[-1])[:, None, None] * h_prev + upd
+
+    y_ref[...] = y.astype(y_ref.dtype)
+
+
+def ssm_scan(
+    x: jax.Array,
+    dt: jax.Array,
+    a: jax.Array,
+    b: jax.Array,
+    c: jax.Array,
+    d: jax.Array,
+    *,
+    chunk: int = 128,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Single-sequence SSD scan. Shapes as in ``ref.ssm_scan``:
+    x (T,H,P), dt (T,H), a (H,), b (T,N), c (T,N), d (H,). Returns (T,H,P).
+    vmap over a batch axis for batched use (see kernels/ops.py).
+    """
+    t, h, p = x.shape
+    n = b.shape[-1]
+    ck = min(chunk, t)
+    assert t % ck == 0, "pad T to a multiple of chunk"
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    grid = (t // ck,)
+    return pl.pallas_call(
+        _ssd_kernel,
+        grid=grid,
+        out_shape=jax.ShapeDtypeStruct((t, h, p), x.dtype),
+        in_specs=[
+            pl.BlockSpec((ck, h, p), lambda i: (i, 0, 0), memory_space=pltpu.VMEM),
+            pl.BlockSpec((ck, h), lambda i: (i, 0), memory_space=pltpu.VMEM),
+            pl.BlockSpec((h,), lambda i: (0,), memory_space=pltpu.VMEM),
+            pl.BlockSpec((ck, n), lambda i: (i, 0), memory_space=pltpu.VMEM),
+            pl.BlockSpec((ck, n), lambda i: (i, 0), memory_space=pltpu.VMEM),
+            pl.BlockSpec((h,), lambda i: (0,), memory_space=pltpu.VMEM),
+        ],
+        out_specs=pl.BlockSpec((ck, h, p), lambda i: (i, 0, 0),
+                               memory_space=pltpu.VMEM),
+        scratch_shapes=[pltpu.VMEM((h, n, p), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a, b, c, d)

@@ -1,0 +1,235 @@
+"""PERKS stencil kernels: the time loop lives INSIDE the Pallas kernel and
+the cached portion of the domain is resident in VMEM across time steps.
+
+This is the paper's central artifact (Fig. 3/4) adapted to TPU:
+
+  GPU                          TPU (here)
+  ----------------------------------------------------------------------
+  persistent kernel launch     one ``pl.pallas_call`` for all N steps
+  time loop + grid.sync()      ``lax.fori_loop`` inside the kernel body
+                               (TensorCore grid is sequential -> the loop-
+                               carried dependency IS the barrier)
+  registers+shared-mem cache   VMEM ``scratch_shapes`` holding the cached
+                               rows for the whole kernel lifetime
+  uncached domain traffic      explicit HBM<->VMEM DMA per time step
+                               (``pltpu.make_async_copy``)
+
+Three entry points (all generic over 2D/3D — blocking is along the leading
+axis, ``StencilSpec.apply_rows`` handles the rest):
+
+``resident_step_count`` / ``stencil_resident``
+    Small-domain PERKS: the whole domain fits in VMEM; zero HBM traffic
+    between time steps (paper Fig. 6 regime).
+
+``stencil_perks``
+    Large-domain PERKS: rows [0, cached_rows) stay resident in VMEM for the
+    kernel's lifetime; remaining rows are streamed HBM->VMEM->HBM every step
+    in leading-axis subtiles (paper Fig. 5 regime, Eq. 5 traffic:
+    2*N*D_uncached + 2*D_cached).
+
+``stencil_baseline_step``
+    The non-persistent reference: one kernel invocation per time step
+    (identical streaming inner loop, steps=1, nothing resident). Used by
+    the host-loop baseline so kernel quality is held constant and only the
+    execution model differs — the paper's controlled comparison.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import StencilSpec
+
+
+def _perks_kernel(
+    x_ref,         # input ref (aliased to io_ref; unused — all I/O via io_ref)
+    io_ref,        # full domain, HBM (ANY), aliased input/output
+    dom,           # VMEM scratch: resident rows [0, R)
+    edge,          # VMEM scratch: step-k values of rows [R, R+r)
+    carry,         # VMEM scratch: step-k values of the r rows above the
+                   # current subtile (already overwritten in HBM)
+    sub,           # VMEM scratch: streaming read buffer
+    wbuf,          # VMEM scratch: streaming write buffer
+    sem,           # DMA semaphore
+    *,
+    spec: StencilSpec,
+    steps: int,
+    cached_rows: int,
+    sub_rows: int,
+):
+    H = io_ref.shape[0]
+    r = spec.radius
+    R = cached_rows
+    starts = list(range(R, H, sub_rows))
+
+    def _copy(src, dst):
+        cp = pltpu.make_async_copy(src, dst, sem)
+        cp.start()
+        cp.wait()
+
+    # Prologue: load the resident region into VMEM once.
+    if R > 0:
+        _copy(io_ref.at[pl.ds(0, R)], dom)
+
+    def time_step(t, _):
+        # (1) Preserve the resident region's bottom halo (rows [R, R+r))
+        #     at step-k values before the streaming pass overwrites them.
+        if 0 < R < H:
+            _copy(io_ref.at[pl.ds(R, r)], edge)
+
+        # (2) Streamed subtiles, top to bottom, updated in place in HBM.
+        for j, start in enumerate(starts):
+            end = min(start + sub_rows, H)
+            u0 = max(start, r)          # first updated row
+            u1 = min(end, H - r)        # one past last updated row
+            if u1 <= u0:
+                continue
+            read_lo, read_hi = u0 - r, u1 + r
+            n_read = read_hi - read_lo
+
+            # Rows already overwritten in HBM come from VMEM:
+            #   subtile 0 borders the resident region -> from `dom`;
+            #   later subtiles border the previous subtile -> from `carry`.
+            hbm_lo = max(read_lo, start)
+            n_top = hbm_lo - read_lo
+            if n_top > 0:
+                if j == 0:
+                    sub[pl.ds(0, n_top)] = dom[pl.ds(R - n_top, n_top)]
+                else:
+                    sub[pl.ds(0, n_top)] = carry[pl.ds(r - n_top, n_top)]
+            _copy(io_ref.at[pl.ds(hbm_lo, read_hi - hbm_lo)],
+                  sub.at[pl.ds(n_top, read_hi - hbm_lo)])
+
+            x = sub[pl.ds(0, n_read)]
+            # Save step-k values of this subtile's bottom r rows for the
+            # next subtile's top halo, before the write-back clobbers them.
+            if j + 1 < len(starts):
+                carry[...] = x[end - r - read_lo:end - read_lo]
+
+            upd = spec.apply_rows(x, u0 - read_lo, u1 - read_lo)
+            wbuf[pl.ds(0, u1 - u0)] = upd
+            _copy(wbuf.at[pl.ds(0, u1 - u0)], io_ref.at[pl.ds(u0, u1 - u0)])
+
+        # (3) Resident region update — entirely VMEM, no HBM traffic.
+        if R > 0:
+            u1c = min(R, H - r)
+            if u1c > r:
+                xc = dom[...] if R >= H else jnp.concatenate(
+                    [dom[...], edge[...]], axis=0)
+                dom[pl.ds(r, u1c - r)] = spec.apply_rows(xc, r, u1c)
+        return ()
+
+    jax.lax.fori_loop(0, steps, time_step, ())
+
+    # Epilogue: the resident region's final state goes back to HBM once.
+    if R > 0:
+        _copy(dom, io_ref.at[pl.ds(0, R)])
+
+
+def _scratch_shapes(shape, dtype, spec, cached_rows, sub_rows):
+    r = spec.radius
+    rest = shape[1:]
+    one = lambda n: (max(n, 1),) + rest  # zero-size scratch is not allowed
+    return [
+        pltpu.VMEM(one(cached_rows), dtype),
+        pltpu.VMEM(one(r), dtype),
+        pltpu.VMEM(one(r), dtype),
+        pltpu.VMEM(one(min(sub_rows, shape[0]) + 2 * r), dtype),
+        pltpu.VMEM(one(min(sub_rows, shape[0])), dtype),
+        pltpu.SemaphoreType.DMA,
+    ]
+
+
+def stencil_perks(
+    x: jax.Array,
+    spec: StencilSpec,
+    *,
+    steps: int,
+    cached_rows: int,
+    sub_rows: int = 128,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Run ``steps`` time steps of ``spec`` with rows [0, cached_rows)
+    VMEM-resident for the kernel's whole lifetime (the PERKS scheme).
+
+    ``cached_rows == x.shape[0]`` gives the fully-resident small-domain
+    kernel; ``cached_rows == 0`` streams everything (still persistent:
+    one launch for all steps, but no inter-step reuse).
+    """
+    H = x.shape[0]
+    r = spec.radius
+    assert cached_rows in (0, H) or cached_rows >= r, (
+        "partial caching needs at least `radius` resident rows")
+    assert cached_rows <= H
+    assert sub_rows >= r, "subtile must cover the next subtile's halo"
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    kernel = functools.partial(
+        _perks_kernel, spec=spec, steps=steps,
+        cached_rows=cached_rows, sub_rows=sub_rows,
+    )
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=pl.BlockSpec(memory_space=pl.ANY),
+        scratch_shapes=_scratch_shapes(x.shape, x.dtype, spec, cached_rows, sub_rows),
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )(x)
+
+
+def _resident_kernel(x_ref, out_ref, dom, *, spec, steps):
+    dom[...] = x_ref[...]
+
+    def body(t, _):
+        dom[...] = spec.apply(dom[...])
+        return ()
+
+    jax.lax.fori_loop(0, steps, body, ())
+    out_ref[...] = dom[...]
+
+
+def stencil_resident(
+    x: jax.Array,
+    spec: StencilSpec,
+    *,
+    steps: int,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Small-domain PERKS: the whole domain lives in VMEM for all steps.
+
+    HBM traffic is exactly one domain load + one domain store total,
+    independent of ``steps`` (Eq. 5 with D_uncached = 0).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return pl.pallas_call(
+        functools.partial(_resident_kernel, spec=spec, steps=steps),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        in_specs=[pl.BlockSpec(x.shape, lambda *_: (0,) * x.ndim,
+                               memory_space=pltpu.VMEM)],
+        out_specs=pl.BlockSpec(x.shape, lambda *_: (0,) * x.ndim,
+                               memory_space=pltpu.VMEM),
+        scratch_shapes=[pltpu.VMEM(x.shape, x.dtype)],
+        interpret=interpret,
+    )(x)
+
+
+def stencil_baseline_step(
+    x: jax.Array,
+    spec: StencilSpec,
+    *,
+    sub_rows: int = 128,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """One non-persistent time step (the host-loop baseline's kernel):
+    identical streaming machinery, nothing survives the call."""
+    return stencil_perks(x, spec, steps=1, cached_rows=0,
+                         sub_rows=sub_rows, interpret=interpret)

@@ -1,0 +1,64 @@
+"""3D PERKS stencils (3d7pt/3d13pt/3d17pt/3d27pt/poisson).
+
+The blocking machinery in ``stencil2d.py`` is generic over rank — it blocks
+along the leading axis and ``StencilSpec.apply_rows`` handles the rest — so
+3D reuses it directly with z-plane streaming. This mirrors the paper's 3D
+implementation (§V-B): "2D planes are loaded one after the other", except
+here the *resident planes* additionally survive across time steps in VMEM.
+
+The only 3D-specific piece is the default streaming granularity: subtiles
+are z-plane groups sized so a subtile (plus halo planes) fits comfortably in
+VMEM next to the resident region.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.core.hardware import Chip, TPU_V5E
+from repro.kernels.common import StencilSpec
+from repro.kernels.stencil2d import (  # re-exported: rank-generic kernels
+    stencil_perks,
+    stencil_resident,
+    stencil_baseline_step,
+)
+
+__all__ = [
+    "stencil_perks",
+    "stencil_resident",
+    "stencil_baseline_step",
+    "plan_resident_planes",
+]
+
+
+def plan_resident_planes(
+    shape: tuple[int, ...],
+    dtype_bytes: int,
+    spec: StencilSpec,
+    *,
+    chip: Chip = TPU_V5E,
+    sub_rows: int = 8,
+    vmem_fraction: float = 0.9,
+) -> int:
+    """How many leading planes (rows in 2D) can stay VMEM-resident.
+
+    The PERKS occupancy analysis (§IV-D) on TPU: the kernel's own working
+    set is the streaming read/write buffers + halo carries; everything left
+    of VMEM holds resident planes. Returns a plane count in [0, shape[0]],
+    rounded down to a multiple of 8 (f32 sublane tiling).
+    """
+    plane_elems = 1
+    for d in shape[1:]:
+        plane_elems *= d
+    plane_bytes = plane_elems * dtype_bytes
+    r = spec.radius
+    working = (2 * (sub_rows + 2 * r) + 2 * r) * plane_bytes  # sub+wbuf+edge+carry
+    budget = chip.onchip_bytes * vmem_fraction - working
+    planes = int(budget // plane_bytes)
+    planes = max(0, min(planes, shape[0]))
+    if 0 < planes < shape[0]:
+        planes = max((planes // 8) * 8, min(8, shape[0]))
+        if planes < r:
+            planes = 0
+    return planes

@@ -1,0 +1,250 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one weight-SHARED attention block
+applied every ``shared_attn_every`` layers.
+
+The layer stack is organised as super-blocks so every execution path is a
+homogeneous scan: ``n_apps`` super-blocks of (``every`` Mamba2 layers +
+one application of the shared attention block), plus a tail of leftover
+Mamba2 layers (zamba2-1.2b: 38 = 6x6 + 2). Weights of the attention block
+are shared across applications; each application owns its own KV-cache slot.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.nn import layers as L
+from repro.nn.rope import apply_rope
+from repro.nn.attention import decode_attention
+from repro.dist.sharding import constrain
+from repro.models import mamba2 as mb
+from repro.models import transformer as tfm
+
+
+def n_shared_apps(cfg: ModelConfig) -> int:
+    return cfg.n_layers // cfg.shared_attn_every if cfg.shared_attn_every else 0
+
+
+def n_tail(cfg: ModelConfig) -> int:
+    return cfg.n_layers - n_shared_apps(cfg) * cfg.shared_attn_every
+
+
+def params_spec(cfg: ModelConfig):
+    block = mb.mamba_block_spec(cfg)
+    spec = {
+        "embed": L.embedding_spec(cfg.vocab, cfg.d_model, cfg.param_dtype),
+        "layers": tfm.stack_specs(
+            tfm.stack_specs(block, cfg.shared_attn_every), n_shared_apps(cfg)),
+        "final_norm": tfm.norm_spec(cfg),
+        "shared_attn": {
+            "attn_norm": tfm.norm_spec(cfg),
+            "attn": tfm.attn_spec(cfg),
+            "mlp_norm": tfm.norm_spec(cfg),
+            "mlp": L.mlp_spec(cfg.d_model, cfg.d_ff, gated=True,
+                              dtype=cfg.param_dtype),
+        },
+    }
+    if n_tail(cfg):
+        spec["tail_layers"] = tfm.stack_specs(block, n_tail(cfg))
+    return spec
+
+
+def _shared_block(sp, cfg: ModelConfig, x, positions, *, collect_kv=False):
+    xa = tfm.apply_norm(cfg, sp["attn_norm"], x)
+    cd = cfg.compute_dtype
+    b, s, _ = x.shape
+    q, k, v = tfm._qkv(sp["attn"], cfg, xa)
+    q = apply_rope(q, positions, theta=cfg.rope_theta)
+    k = apply_rope(k, positions, theta=cfg.rope_theta)
+    from repro.nn.attention import chunked_attention
+    out = chunked_attention(q, k, v, causal=True, window=cfg.window,
+                            q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    h = jnp.einsum("bse,ed->bsd", out.reshape(b, s, -1),
+                   sp["attn"]["wo"].astype(cd))
+    x = x + h.astype(x.dtype)
+    m = L.mlp(sp["mlp"], tfm.apply_norm(cfg, sp["mlp_norm"], x),
+              act=cfg.act, compute_dtype=cd)
+    x = x + m.astype(x.dtype)
+    return (x, (k, v)) if collect_kv else x
+
+
+def _mamba_scan(cfg, x, lp_group, *, collect_state=False):
+    def inner(x, lp):
+        if collect_state:
+            out, st = mb.mamba_block(lp, cfg, x, return_state=True)
+            return constrain(x + out.astype(x.dtype),
+                             ("batch", "seq", None)), st
+        out = mb.mamba_block(lp, cfg, x)
+        return constrain(x + out.astype(x.dtype), ("batch", "seq", None)), None
+    return jax.lax.scan(inner, x, lp_group)
+
+
+def forward_hidden(params, cfg: ModelConfig, tokens, vision_embeds=None):
+    b, s = tokens.shape
+    x = tfm.embed_tokens(params, cfg, tokens, vision_embeds)
+    x = constrain(x, ("batch", "seq", None))
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    sp = params["shared_attn"]
+
+    def super_body(x, lp_group):
+        x, _ = _mamba_scan(cfg, x, lp_group)
+        x = constrain(_shared_block(sp, cfg, x, positions),
+                      ("batch", "seq", None))
+        return x, None
+
+    if cfg.remat:
+        super_body = jax.checkpoint(super_body)
+    x, _ = jax.lax.scan(super_body, x, params["layers"])
+    if "tail_layers" in params:
+        def tail_body(x, lp):
+            out = mb.mamba_block(lp, cfg, x)
+            return constrain(x + out.astype(x.dtype),
+                             ("batch", "seq", None)), None
+        if cfg.remat:
+            tail_body = jax.checkpoint(tail_body)
+        x, _ = jax.lax.scan(tail_body, x, params["tail_layers"])
+    return tfm.apply_norm(cfg, params["final_norm"], x), jnp.float32(0.0)
+
+
+def prefill(params, cfg: ModelConfig, tokens, vision_embeds=None,
+            cache_seq=None):
+    """Prompt forward collecting Mamba states + per-application shared KV."""
+    b, s = tokens.shape
+    total = cache_seq or s
+    c = tfm.cache_len(cfg, total)
+    keep = min(c, s)
+    x = tfm.embed_tokens(params, cfg, tokens, vision_embeds)
+    x = constrain(x, ("batch", "seq", None))
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    sp = params["shared_attn"]
+
+    def super_body(x, lp_group):
+        x, states = _mamba_scan(cfg, x, lp_group, collect_state=True)
+        x, (k, v) = _shared_block(sp, cfg, x, positions, collect_kv=True)
+        x = constrain(x, ("batch", "seq", None))
+        return x, (states, (k[:, s - keep:], v[:, s - keep:]))
+
+    if cfg.remat:
+        super_body = jax.checkpoint(super_body)
+    x, ((conv, h), (sk, sv)) = jax.lax.scan(super_body, x, params["layers"])
+
+    start = (s - keep) % c
+    def place(entry):
+        buf = jnp.zeros(entry.shape[:2] + (c,) + entry.shape[3:], entry.dtype)
+        return jax.lax.dynamic_update_slice_in_dim(buf, entry, start, axis=2)
+
+    cache = {"conv": conv, "h": h, "shared_k": place(sk),
+             "shared_v": place(sv), "pos": jnp.int32(s)}
+    if "tail_layers" in params:
+        def tail_body(x, lp):
+            out, st = mb.mamba_block(lp, cfg, x, return_state=True)
+            return constrain(x + out.astype(x.dtype),
+                             ("batch", "seq", None)), st
+        if cfg.remat:
+            tail_body = jax.checkpoint(tail_body)
+        x, (tconv, th) = jax.lax.scan(tail_body, x, params["tail_layers"])
+        cache["tail_conv"] = tconv
+        cache["tail_h"] = th
+    x = tfm.apply_norm(cfg, params["final_norm"], x)
+    logits = L.unembed(params["embed"], x[:, -1], cfg.compute_dtype)
+    return logits, cache
+
+
+# -- decode state ---------------------------------------------------------------
+
+def cache_spec(cfg: ModelConfig, batch: int, seq_len: int):
+    s = cfg.ssm
+    d = cfg.d_model
+    di, n, h = s.d_inner(d), s.d_state, s.n_heads(d)
+    cd = cfg.compute_dtype
+    napps, every, tail = n_shared_apps(cfg), cfg.shared_attn_every, n_tail(cfg)
+    c = tfm.cache_len(cfg, seq_len)
+    spec = {
+        "conv": jax.ShapeDtypeStruct(
+            (napps, every, batch, s.conv_kernel - 1, di + 2 * n), cd),
+        "h": jax.ShapeDtypeStruct(
+            (napps, every, batch, h, n, s.head_dim), jnp.float32),
+        "shared_k": jax.ShapeDtypeStruct(
+            (napps, batch, c, cfg.n_kv_heads, cfg.head_dim), cd),
+        "shared_v": jax.ShapeDtypeStruct(
+            (napps, batch, c, cfg.n_kv_heads, cfg.head_dim), cd),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    if tail:
+        spec["tail_conv"] = jax.ShapeDtypeStruct(
+            (tail, batch, s.conv_kernel - 1, di + 2 * n), cd)
+        spec["tail_h"] = jax.ShapeDtypeStruct(
+            (tail, batch, h, n, s.head_dim), jnp.float32)
+    return spec
+
+
+def cache_logical_axes(cfg: ModelConfig):
+    kv = (None, "batch", "seq", "kv_heads", None)
+    axes = {
+        "conv": (None, None, "batch", None, "ffn"),
+        "h": (None, None, "batch", "heads", None, None),
+        "shared_k": kv, "shared_v": kv, "pos": (),
+    }
+    if n_tail(cfg):
+        axes["tail_conv"] = (None, "batch", None, "ffn")
+        axes["tail_h"] = (None, "batch", "heads", None, None)
+    return axes
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_spec(cfg, batch, seq_len))
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens):
+    b = tokens.shape[0]
+    cd = cfg.compute_dtype
+    pos = cache["pos"]
+    x = tfm.embed_tokens(params, cfg, tokens[:, None])[:, 0]
+    sp = params["shared_attn"]
+    c = cache["shared_k"].shape[2]
+    slot = pos % c
+    length = jnp.broadcast_to(jnp.minimum(pos + 1, c), (b,))
+
+    def shared_step(x, kc, vc):
+        xa = tfm.apply_norm(cfg, sp["attn_norm"], x)[:, None, :]
+        q, k1, v1 = tfm._qkv(sp["attn"], cfg, xa)
+        posb = jnp.full((b, 1), pos)
+        q = apply_rope(q, posb, theta=cfg.rope_theta)[:, 0]
+        k1 = apply_rope(k1, posb, theta=cfg.rope_theta)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k1, slot, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v1, slot, axis=1)
+        att = decode_attention(q, kc, vc, length=length)
+        h = jnp.einsum("be,ed->bd", att.reshape(b, -1),
+                       sp["attn"]["wo"].astype(cd))
+        x = x + h.astype(x.dtype)
+        m = L.mlp(sp["mlp"], tfm.apply_norm(cfg, sp["mlp_norm"], x),
+                  act=cfg.act, compute_dtype=cd)
+        return x + m.astype(x.dtype), kc, vc
+
+    def inner_step(x, args):
+        lp, conv_l, h_l = args
+        (conv_l, h_l), out = mb.mamba_block_step(lp, cfg, (conv_l, h_l), x)
+        return x + out.astype(x.dtype), (conv_l, h_l)
+
+    def super_step(x, args):
+        lp_group, conv_g, h_g, kc, vc = args
+        x, (conv_g, h_g) = jax.lax.scan(inner_step, x, (lp_group, conv_g, h_g))
+        x, kc, vc = shared_step(x, kc, vc)
+        return x, (conv_g, h_g, kc, vc)
+
+    x, (conv, h, sk, sv) = jax.lax.scan(
+        super_step, x,
+        (params["layers"], cache["conv"], cache["h"],
+         cache["shared_k"], cache["shared_v"]))
+    new_cache = {"conv": conv, "h": h, "shared_k": sk, "shared_v": sv,
+                 "pos": pos + 1}
+    if "tail_layers" in params:
+        x, (tconv, th) = jax.lax.scan(
+            inner_step, x,
+            (params["tail_layers"], cache["tail_conv"], cache["tail_h"]))
+        new_cache["tail_conv"] = tconv
+        new_cache["tail_h"] = th
+    x = tfm.apply_norm(cfg, params["final_norm"], x)
+    logits = L.unembed(params["embed"], x, cd)
+    return logits, new_cache

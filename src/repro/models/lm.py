@@ -1,0 +1,220 @@
+"""Unified LM facade over the four model families.
+
+``Model`` dispatches on ``cfg.family`` and exposes the surface the
+launcher, trainer, server and dry-run consume:
+
+  * ``params_spec`` / ``init`` — single source of truth for weights.
+  * ``loss``        — next-token CE with **chunked logits** (the (B,S,V)
+    logits tensor is never materialised; gemma's 256k vocab at S=4096
+    would be 67 GB/device otherwise).
+  * ``prefill``     — prompt forward that returns the decode cache.
+  * ``decode_step`` — one-token serve step (the dry-run's ``serve_step``).
+  * ``decode_loop`` — the PERKS persistent decode: N tokens fused into one
+    dispatch via ``lax.scan`` with the cache as donated carry — the
+    host-loop -> device-loop transformation of paper Fig. 3 applied to
+    autoregressive generation.
+  * ``input_specs`` — ShapeDtypeStruct stand-ins per shape cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.nn import param as P
+from repro.nn import layers as L
+from repro.models import transformer, mamba2, hybrid, encdec
+
+_FAMILIES = {
+    "dense": transformer,
+    "ssm": mamba2,
+    "hybrid": hybrid,
+    "encdec": encdec,
+}
+
+
+def chunked_cross_entropy(hidden, table, labels, mask, *, chunk: int = 512,
+                          compute_dtype=jnp.bfloat16):
+    """Mean next-token CE without materialising full logits.
+
+    hidden (B,S,d); table (V,d); labels/mask (B,S). Scans over S-chunks;
+    each chunk's (B,c,V) logits live only inside the (rematerialised) body.
+    """
+    b, s, d = hidden.shape
+    c = min(chunk, s)
+    assert s % c == 0
+    n = s // c
+    hs = jnp.moveaxis(hidden.reshape(b, n, c, d), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(b, n, c), 1, 0)
+    ms = jnp.moveaxis(mask.reshape(b, n, c), 1, 0)
+
+    from repro.dist.sharding import constrain
+
+    @jax.checkpoint
+    def body(tot, inp):
+        h, l, m = inp
+        logits = jnp.einsum("bcd,vd->bcv", h.astype(compute_dtype),
+                            table.astype(compute_dtype)).astype(jnp.float32)
+        logits = constrain(logits, ("batch", None, "vocab"))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, l[..., None], axis=-1)[..., 0]
+        return tot + jnp.sum((lse - ll) * m), None
+
+    tot, _ = jax.lax.scan(body, jnp.float32(0.0), (hs, ls, ms))
+    return tot / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    @property
+    def mod(self):
+        return _FAMILIES[self.cfg.family]
+
+    # -- params ----------------------------------------------------------
+
+    def params_spec(self):
+        return self.mod.params_spec(self.cfg)
+
+    def init(self, key: jax.Array):
+        return P.init(self.params_spec(), key)
+
+    def n_params(self) -> int:
+        return P.count_params(self.params_spec())
+
+    # -- training --------------------------------------------------------
+
+    def loss(self, params, batch) -> jax.Array:
+        """batch: tokens (B,S) [+ mask, + vision_embeds | frames]."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        extra = batch.get("vision_embeds") if cfg.family == "dense" else \
+            batch.get("frames")
+        hidden, aux = self.mod.forward_hidden(params, cfg, tokens, extra)
+        labels = jnp.roll(tokens, -1, axis=1)
+        mask = batch.get("mask")
+        if mask is None:
+            mask = jnp.ones_like(tokens, jnp.float32)
+        mask = mask.at[:, -1].set(0.0)          # no target for the last token
+        if cfg.vision_prefix:
+            keep = jnp.arange(tokens.shape[1]) >= cfg.vision_prefix
+            mask = mask * keep[None, :]
+        ce = chunked_cross_entropy(hidden, params["embed"]["table"], labels,
+                                   mask, chunk=cfg.logits_chunk,
+                                   compute_dtype=cfg.compute_dtype)
+        if cfg.moe is not None:
+            ce = ce + cfg.moe.aux_loss_weight * aux
+        return ce
+
+    # -- serving ----------------------------------------------------------
+
+    def prefill(self, params, batch, cache_seq: Optional[int] = None):
+        cfg = self.cfg
+        extra = batch.get("vision_embeds") if cfg.family == "dense" else \
+            batch.get("frames")
+        return self.mod.prefill(params, cfg, batch["tokens"], extra,
+                                cache_seq=cache_seq)
+
+    def decode_step(self, params, cache, tokens):
+        return self.mod.decode_step(params, self.cfg, cache, tokens)
+
+    def init_cache(self, batch: int, seq_len: int):
+        return self.mod.init_cache(self.cfg, batch, seq_len)
+
+    def cache_spec(self, batch: int, seq_len: int):
+        return self.mod.cache_spec(self.cfg, batch, seq_len)
+
+    def cache_logical_axes(self):
+        return self.mod.cache_logical_axes(self.cfg)
+
+    def decode_loop(self, params, cache, first_tokens, n_tokens: int,
+                    *, temperature: float = 0.0, rng: Optional[jax.Array] = None):
+        """PERKS persistent decode: ``n_tokens`` steps in ONE dispatch.
+
+        The baseline serving loop calls ``decode_step`` from the host once
+        per token (cache out/in of HBM-visible buffers, one dispatch per
+        token); this fuses the loop with ``lax.scan`` and a donated cache —
+        the LM analogue of moving the stencil time loop into the kernel.
+        Returns (tokens (B, n_tokens), final cache).
+        """
+        rng = rng if rng is not None else jax.random.key(0)
+        return _decode_loop_jit(self, params, cache, first_tokens, rng,
+                                n_tokens, temperature)
+
+    # -- dry-run input stand-ins ------------------------------------------
+
+    def input_specs(self, *, kind: str, seq_len: int, global_batch: int):
+        """ShapeDtypeStruct inputs for train / prefill / decode cells."""
+        cfg = self.cfg
+        i32 = jnp.int32
+        if kind == "train":
+            if cfg.family == "encdec":
+                from repro.models.encdec import enc_seq, dec_seq
+                return {
+                    "tokens": jax.ShapeDtypeStruct(
+                        (global_batch, dec_seq(seq_len)), i32),
+                    "frames": jax.ShapeDtypeStruct(
+                        (global_batch, enc_seq(seq_len), cfg.d_model),
+                        cfg.compute_dtype),
+                }
+            out = {"tokens": jax.ShapeDtypeStruct(
+                (global_batch, seq_len), i32)}
+            if cfg.vision_prefix:
+                out["vision_embeds"] = jax.ShapeDtypeStruct(
+                    (global_batch, cfg.vision_prefix, cfg.d_model),
+                    cfg.compute_dtype)
+            return out
+        if kind == "prefill":
+            return self.input_specs(kind="train", seq_len=seq_len,
+                                    global_batch=global_batch)
+        if kind == "decode":
+            return {
+                "cache": self.cache_spec(global_batch, seq_len),
+                "tokens": jax.ShapeDtypeStruct((global_batch,), i32),
+            }
+        raise ValueError(kind)
+
+    def batch_logical_axes(self, *, kind: str):
+        """Logical sharding axes matching ``input_specs`` pytrees."""
+        cfg = self.cfg
+        if kind in ("train", "prefill"):
+            axes = {"tokens": ("batch", None)}
+            if cfg.family == "encdec":
+                axes["frames"] = ("batch", None, None)
+            elif cfg.vision_prefix:
+                axes["vision_embeds"] = ("batch", None, None)
+            return axes
+        if kind == "decode":
+            return {"cache": self.cache_logical_axes(),
+                    "tokens": ("batch",)}
+        raise ValueError(kind)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("model", "n_tokens", "temperature"),
+                   donate_argnames=("cache",))
+def _decode_loop_jit(model: Model, params, cache, first_tokens, rng,
+                     n_tokens: int, temperature: float):
+    def step(carry, _):
+        cache, toks, key = carry
+        logits, cache = model.decode_step(params, cache, toks)
+        if temperature > 0.0:
+            key, sub = jax.random.split(key)
+            nxt = jax.random.categorical(sub, logits / temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        nxt = nxt.astype(jnp.int32)
+        return (cache, nxt, key), nxt
+
+    (cache, _, _), toks = jax.lax.scan(
+        step, (cache, first_tokens, rng), None, length=n_tokens)
+    return jnp.moveaxis(toks, 0, 1), cache
+
+
+def get_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,206 @@
+"""Mamba2 (SSD) blocks and the pure-SSM decoder family (mamba2-780m).
+
+The SSD recurrence is the purest instance of the paper's iterative pattern
+(x^{k+1} = F(x^k) along the sequence); execution goes through
+``nn/ssd.py`` (chunked, differentiable; dry-run path) with the PERKS Pallas
+kernel in ``kernels/ssm_scan.py`` as the TPU hot path — state resident in
+VMEM across chunk iterations.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.nn.param import ParamSpec, is_spec
+from repro.nn import layers as L
+from repro.nn.ssd import (ssd_chunked, ssd_step, causal_conv1d,
+                          causal_conv1d_step)
+from repro.dist.sharding import constrain
+
+
+def mamba_block_spec(cfg: ModelConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    h = s.n_heads(d)
+    n = s.d_state
+    conv_ch = di + 2 * n            # conv runs over [x, B, C]
+    dt_ = cfg.param_dtype
+    return {
+        "norm": L.rmsnorm_spec(d, dt_),
+        # in_proj -> [z (di), xBC (di + 2N), dt (H)]
+        "in_proj": ParamSpec((d, 2 * di + 2 * n + h), dt_, "scaled",
+                             ("embed", "ffn")),
+        "conv_w": ParamSpec((s.conv_kernel, conv_ch), dt_, "scaled", (None, "ffn")),
+        "conv_b": ParamSpec((conv_ch,), dt_, "zeros", ("ffn",)),
+        "a_log": ParamSpec((h,), dt_, "zeros", (None,)),
+        "dt_bias": ParamSpec((h,), dt_, "zeros", (None,)),
+        "d_skip": ParamSpec((h,), dt_, "ones", (None,)),
+        "out_norm": L.rmsnorm_spec(di, dt_),
+        "out_proj": ParamSpec((di, d), dt_, "scaled", ("ffn", "embed")),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    n = s.d_state
+    h = s.n_heads(cfg.d_model)
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * n]
+    dt = zxbcdt[..., di + di + 2 * n:]
+    return z, xbc, dt, di, n, h
+
+
+def mamba_block(p, cfg: ModelConfig, x, *, return_state: bool = False):
+    """x (B, S, d) -> (B, S, d). Train/prefill path (chunked SSD).
+    With ``return_state`` also returns (conv_state, h_final) for serving."""
+    s = cfg.ssm
+    cd = cfg.compute_dtype
+    bsz, seq, _ = x.shape
+    xn = L.rmsnorm(p["norm"], x)
+    zxbcdt = jnp.einsum("bsd,de->bse", xn.astype(cd), p["in_proj"].astype(cd))
+    z, xbc_raw, dt, di, n, h = _split_proj(cfg, zxbcdt)
+
+    xbc = jax.nn.silu(causal_conv1d(xbc_raw, p["conv_w"].astype(cd),
+                                    p["conv_b"].astype(cd)))
+    xs = xbc[..., :di].reshape(bsz, seq, h, s.head_dim)
+    b_in = xbc[..., di:di + n]
+    c_in = xbc[..., di + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+
+    y, h_final = ssd_chunked(xs, dt, a, b_in, c_in,
+                             p["d_skip"].astype(jnp.float32), chunk=s.chunk,
+                             return_state=True)
+    y = y.reshape(bsz, seq, di)
+    y = L.rmsnorm(p["out_norm"], y) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y.astype(cd), p["out_proj"].astype(cd))
+    if return_state:
+        conv_state = xbc_raw[:, seq - (s.conv_kernel - 1):, :]  # last K-1 raw
+        return out, (conv_state, h_final)
+    return out
+
+
+def mamba_block_step(p, cfg: ModelConfig, state, x1):
+    """One decode step. state = (conv_state (B,K-1,conv_ch), h (B,H,N,P));
+    x1 (B, d). Returns (new_state, out (B, d))."""
+    s = cfg.ssm
+    cd = cfg.compute_dtype
+    bsz = x1.shape[0]
+    conv_state, h_state = state
+    xn = L.rmsnorm(p["norm"], x1)
+    zxbcdt = jnp.einsum("bd,de->be", xn.astype(cd), p["in_proj"].astype(cd))
+    z, xbc, dt, di, n, h = _split_proj(cfg, zxbcdt)
+
+    conv_state, xbc = causal_conv1d_step(conv_state, xbc,
+                                         p["conv_w"].astype(cd),
+                                         p["conv_b"].astype(cd))
+    xbc = jax.nn.silu(xbc)
+    xs = xbc[..., :di].reshape(bsz, h, s.head_dim)
+    b_in = xbc[..., di:di + n]
+    c_in = xbc[..., di + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+
+    h_state, y = ssd_step(h_state, xs, dt, a, b_in, c_in,
+                          p["d_skip"].astype(jnp.float32))
+    y = y.reshape(bsz, di)
+    y = L.rmsnorm(p["out_norm"], y) * jax.nn.silu(z)
+    out = jnp.einsum("be,ed->bd", y.astype(cd), p["out_proj"].astype(cd))
+    return (conv_state, h_state), out
+
+
+# -- pure-SSM LM (mamba2-780m) -------------------------------------------------
+
+def params_spec(cfg: ModelConfig):
+    from repro.models.transformer import stack_specs, norm_spec
+    return {
+        "embed": L.embedding_spec(cfg.vocab, cfg.d_model, cfg.param_dtype),
+        "layers": stack_specs(mamba_block_spec(cfg), cfg.n_layers),
+        "final_norm": norm_spec(cfg),
+    }
+
+
+def forward_hidden(params, cfg: ModelConfig, tokens, vision_embeds=None):
+    from repro.models.transformer import apply_norm, embed_tokens
+    x = embed_tokens(params, cfg, tokens, vision_embeds)
+    x = constrain(x, ("batch", "seq", None))
+
+    def body(x, lp):
+        x = x + mamba_block(lp, cfg, x).astype(x.dtype)
+        x = constrain(x, ("batch", "seq", None))
+        return x, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return apply_norm(cfg, params["final_norm"], x), jnp.float32(0.0)
+
+
+def prefill(params, cfg: ModelConfig, tokens, vision_embeds=None,
+            cache_seq=None):
+    """Forward over the prompt collecting SSM + conv states per layer.
+    Returns (last-token logits, cache at pos = S)."""
+    from repro.models.transformer import apply_norm, embed_tokens
+    b, s = tokens.shape
+    x = embed_tokens(params, cfg, tokens, vision_embeds)
+    x = constrain(x, ("batch", "seq", None))
+
+    def body(x, lp):
+        out, st = mamba_block(lp, cfg, x, return_state=True)
+        x = constrain(x + out.astype(x.dtype), ("batch", "seq", None))
+        return x, st
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, (conv, h) = jax.lax.scan(body, x, params["layers"])
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = L.unembed(params["embed"], x[:, -1], cfg.compute_dtype)
+    return logits, {"conv": conv, "h": h, "pos": jnp.int32(s)}
+
+
+def cache_spec(cfg: ModelConfig, batch: int, seq_len: int):
+    s = cfg.ssm
+    d = cfg.d_model
+    di, n, h = s.d_inner(d), s.d_state, s.n_heads(d)
+    cd = cfg.compute_dtype
+    return {
+        "conv": jax.ShapeDtypeStruct(
+            (cfg.n_layers, batch, s.conv_kernel - 1, di + 2 * n), cd),
+        "h": jax.ShapeDtypeStruct(
+            (cfg.n_layers, batch, h, n, s.head_dim), jnp.float32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def cache_logical_axes(cfg: ModelConfig):
+    return {
+        "conv": (None, "batch", None, "ffn"),
+        "h": (None, "batch", "heads", None, None),
+        "pos": (),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_spec(cfg, batch, seq_len))
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens):
+    from repro.models.transformer import apply_norm, embed_tokens
+    x = embed_tokens(params, cfg, tokens[:, None])[:, 0]
+
+    def body(x, args):
+        lp, conv_l, h_l = args
+        (conv_l, h_l), out = mamba_block_step(lp, cfg, (conv_l, h_l), x)
+        return x + out.astype(x.dtype), (conv_l, h_l)
+
+    x, (conv, h) = jax.lax.scan(body, x,
+                                (params["layers"], cache["conv"], cache["h"]))
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = L.unembed(params["embed"], x, cfg.compute_dtype)
+    return logits, {"conv": conv, "h": h, "pos": cache["pos"] + 1}

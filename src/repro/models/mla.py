@@ -1,0 +1,140 @@
+"""Multi-head Latent Attention (MiniCPM3 / DeepSeek-V2 style).
+
+Train/prefill expands the compressed latents to per-head K/V and reuses the
+generic chunked attention. Decode runs in the *absorbed* form: queries are
+projected into the kv-latent space, attention scores and context are
+computed directly against the compressed ``c_kv`` cache — the cache stays
+(kv_lora + rope_dim) per token, a ~10x state shrink that compounds with the
+PERKS persistent-decode execution (small resident state ⇒ more of it stays
+on-chip).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.nn.param import ParamSpec
+from repro.nn import layers as L
+from repro.nn.rope import apply_rope
+from repro.nn.attention import chunked_attention, NEG
+
+
+def mla_spec(cfg: ModelConfig):
+    a = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    dt = cfg.param_dtype
+    return {
+        "wdq": ParamSpec((d, a.q_lora), dt, "scaled", ("embed", None)),
+        "q_norm": L.rmsnorm_spec(a.q_lora, dt),
+        "wuq": ParamSpec((a.q_lora, h * (a.nope_dim + a.rope_dim)), dt,
+                         "scaled", (None, "heads")),
+        "wdkv": ParamSpec((d, a.kv_lora + a.rope_dim), dt, "scaled",
+                          ("embed", None)),
+        "kv_norm": L.rmsnorm_spec(a.kv_lora, dt),
+        "wuk": ParamSpec((a.kv_lora, h * a.nope_dim), dt, "scaled",
+                         (None, "heads")),
+        "wuv": ParamSpec((a.kv_lora, h * a.v_dim), dt, "scaled",
+                         (None, "heads")),
+        "wo": ParamSpec((h * a.v_dim, d), dt, "scaled", ("heads", "embed")),
+    }
+
+
+def _latents(p, cfg, x, positions):
+    """Shared q latents + compressed kv latents (+roped shared key)."""
+    a, cd = cfg.mla, cfg.compute_dtype
+    cq = L.rmsnorm(p["q_norm"], jnp.einsum(
+        "...d,dr->...r", x.astype(cd), p["wdq"].astype(cd)))
+    dkv = jnp.einsum("...d,dr->...r", x.astype(cd), p["wdkv"].astype(cd))
+    ckv = L.rmsnorm(p["kv_norm"], dkv[..., :a.kv_lora])
+    k_rope = apply_rope(dkv[..., a.kv_lora:], positions, theta=cfg.rope_theta)
+    return cq, ckv, k_rope
+
+
+def mla_attention(p, cfg: ModelConfig, x, positions, *, return_cache=False):
+    """Full (train/prefill) MLA: expand latents, run chunked attention.
+    With ``return_cache`` also returns the compressed per-token cache
+    entries concat(c_kv, k_rope) (B, S, kv_lora+rope_dim)."""
+    a, cd = cfg.mla, cfg.compute_dtype
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    cq, ckv, k_rope = _latents(p, cfg, x, positions)
+
+    q = jnp.einsum("...r,re->...e", cq, p["wuq"].astype(cd)).reshape(
+        b, s, h, a.nope_dim + a.rope_dim)
+    q_nope, q_rope = q[..., :a.nope_dim], q[..., a.nope_dim:]
+    q_rope = apply_rope(q_rope, positions, theta=cfg.rope_theta)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+    k_nope = jnp.einsum("...r,re->...e", ckv, p["wuk"].astype(cd)).reshape(
+        b, s, h, a.nope_dim)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, a.rope_dim))],
+        axis=-1)
+    v = jnp.einsum("...r,re->...e", ckv, p["wuv"].astype(cd)).reshape(
+        b, s, h, a.v_dim)
+    # pad v to q/k head_dim for the shared attention kernel, then slice back
+    pad = q.shape[-1] - a.v_dim
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, pad)))
+    out = chunked_attention(q, k, vp, causal=True, q_chunk=cfg.q_chunk,
+                            kv_chunk=cfg.kv_chunk)[..., :a.v_dim]
+    o = jnp.einsum("...e,ed->...d", out.reshape(b, s, h * a.v_dim),
+                   p["wo"].astype(cd))
+    if return_cache:
+        return o, jnp.concatenate([ckv, k_rope], axis=-1)
+    return o
+
+
+def mla_decode_step(p, cfg: ModelConfig, x1, ckv_cache, pos):
+    """Absorbed-form single-token MLA decode.
+
+    x1 (B, d) current token activations; ckv_cache (B, C, kv_lora+rope_dim);
+    pos () current position. Returns (out (B, d), new_entry (B, kv_lora+rope)).
+    """
+    a, cd = cfg.mla, cfg.compute_dtype
+    b, _ = x1.shape
+    h = cfg.n_heads
+    c = ckv_cache.shape[1]
+    positions = jnp.full((b, 1), pos)
+
+    cq, ckv_new, k_rope_new = _latents(p, cfg, x1[:, None, :], positions)
+    new_entry = jnp.concatenate([ckv_new, k_rope_new], axis=-1)[:, 0]  # (B, r+rope)
+    cache = _ring_write(ckv_cache, new_entry, pos)
+
+    q = jnp.einsum("b1r,re->b1e", cq, p["wuq"].astype(cd)).reshape(
+        b, h, a.nope_dim + a.rope_dim)
+    q_nope = q[..., :a.nope_dim]
+    # rope on the head axis: same position for every head
+    q_rope = apply_rope(q[..., a.nope_dim:], jnp.full((b, h), pos),
+                        theta=cfg.rope_theta)
+
+    # absorb W_uk into the query: q_c (B, H, kv_lora)
+    wuk = p["wuk"].astype(cd).reshape(a.kv_lora, h, a.nope_dim)
+    q_c = jnp.einsum("bhe,rhe->bhr", q_nope, wuk)
+
+    ckv_k = cache[..., :a.kv_lora]                    # (B, C, r)
+    krope_k = cache[..., a.kv_lora:]                  # (B, C, rope)
+    scale = 1.0 / jnp.sqrt(jnp.float32(a.nope_dim + a.rope_dim))
+    lg = (jnp.einsum("bhr,bcr->bhc", q_c, ckv_k,
+                     preferred_element_type=jnp.float32)
+          + jnp.einsum("bhe,bce->bhc", q_rope, krope_k,
+                       preferred_element_type=jnp.float32)) * scale
+    valid = jnp.arange(c)[None, :] <= pos
+    lg = jnp.where(valid[:, None, :], lg, NEG)
+    w = jax.nn.softmax(lg, axis=-1).astype(cd)
+
+    ctx = jnp.einsum("bhc,bcr->bhr", w, ckv_k)        # (B, H, kv_lora)
+    wuv = p["wuv"].astype(cd).reshape(a.kv_lora, h, a.v_dim)
+    o = jnp.einsum("bhr,rhe->bhe", ctx, wuv).reshape(b, h * a.v_dim)
+    out = jnp.einsum("be,ed->bd", o, p["wo"].astype(cd))
+    return out, cache
+
+
+def _ring_write(cache, entry, pos):
+    c = cache.shape[1]
+    return jax.lax.dynamic_update_slice_in_dim(cache, entry[:, None, :],
+                                               pos % c, axis=1)
+
+
+def mla_cache_width(cfg: ModelConfig) -> int:
+    return cfg.mla.kv_lora + cfg.mla.rope_dim

@@ -1,0 +1,156 @@
+"""Mixture-of-Experts FFN with expert parallelism over the "model" axis.
+
+Dispatch is switch-style capacity routing (cumsum positions), implemented
+*gather-first*: instead of scattering (n, d) token vectors into the expert
+buffer (whose updates tensor would be huge), we scatter only int32 token
+indices into a (E_local, capacity) slot map and then **gather** token rows —
+the large tensors are only ever (E_local, cap, d).
+
+Expert parallelism: expert weights are sharded over the "model" mesh axis
+(qwen3: 128/16 = 8 experts per chip; llama4: 1 per chip). Inside
+``shard_map`` each chip routes against the full router, keeps only its
+local experts' assignments, computes them, and scatters-adds its partial
+outputs; a single ``psum`` over "model" combines — the same collective a
+TP FFN already pays, so EP here adds no extra communication phase.
+
+Token overflow beyond ``capacity_factor`` is dropped (standard switch
+semantics); the load-balance auxiliary loss keeps routing near-uniform.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.nn.param import ParamSpec
+from repro.nn import layers as L
+from repro.dist import sharding as shd
+from repro.dist.sharding import smap
+
+
+def moe_spec(cfg: ModelConfig):
+    m = cfg.moe
+    d, ff, e = cfg.d_model, m.d_ff_expert, m.n_experts
+    dt = cfg.param_dtype
+    p = {
+        "router": ParamSpec((d, e), dt, "scaled", ("embed", None)),
+        "gate": ParamSpec((e, d, ff), dt, "scaled", ("expert", "embed", "ffn")),
+        "up": ParamSpec((e, d, ff), dt, "scaled", ("expert", "embed", "ffn")),
+        "down": ParamSpec((e, ff, d), dt, "scaled", ("expert", "ffn", "embed")),
+    }
+    if m.shared_expert_ff:
+        p["shared"] = L.mlp_spec(d, m.shared_expert_ff, gated=True, dtype=dt)
+    return p
+
+
+def _capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    m = cfg.moe
+    cap = int(n_tokens * m.top_k * m.capacity_factor / m.n_experts)
+    return max(4, cap)
+
+
+def _moe_local(x, wr, wg, wu, wd, e0, *, cfg: ModelConfig, cap: int):
+    """Per-shard MoE: x (n, d) local tokens, wg/wu/wd (E_local, d/ff, ...)
+    local experts starting at global expert index ``e0``.
+    Returns (y (n, d) partial outputs, aux scalar)."""
+    m = cfg.moe
+    cd = cfg.compute_dtype
+    n, d = x.shape
+    e_local = wg.shape[0]
+
+    logits = jnp.einsum("nd,de->ne", x.astype(cd), wr.astype(cd))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    topv, topi = jax.lax.top_k(probs, m.top_k)                  # (n, k)
+
+    # keep only choices routed to this shard's experts
+    local = (topi >= e0) & (topi < e0 + e_local)                # (n, k)
+    le = jnp.clip(topi - e0, 0, e_local - 1)
+    eids = jnp.arange(e_local)[None, None, :]
+    choice_oh = (le[..., None] == eids) & local[..., None]      # (n, k, E_l)
+    oh = choice_oh.any(axis=1)                                  # (n, E_l)
+    gatew = jnp.where(choice_oh, topv[..., None], 0.0).sum(axis=1)  # (n, E_l)
+
+    pos = jnp.cumsum(oh.astype(jnp.int32), axis=0) - 1          # (n, E_l)
+    keep = oh & (pos < cap)
+    slot = jnp.where(keep, pos, cap)                            # overflow -> cap
+
+    e_idx = jnp.broadcast_to(jnp.arange(e_local)[None, :], slot.shape)
+    tok_idx = jnp.broadcast_to(jnp.arange(n)[:, None], slot.shape)
+    token_for_slot = jnp.zeros((e_local, cap + 1), jnp.int32).at[
+        e_idx.reshape(-1), slot.reshape(-1)].add(tok_idx.reshape(-1))[:, :cap]
+    slot_w = jnp.zeros((e_local, cap + 1), jnp.float32).at[
+        e_idx.reshape(-1), slot.reshape(-1)].add(
+        jnp.where(keep, gatew, 0.0).reshape(-1))[:, :cap]
+
+    buf = x[token_for_slot].astype(cd)                          # (E_l, cap, d)
+    h = L.act_fn(cfg.act)(jnp.einsum("ecd,edf->ecf", buf, wg.astype(cd)))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, wu.astype(cd))
+    out_e = jnp.einsum("ecf,efd->ecd", h, wd.astype(cd))
+    out_e = out_e * slot_w[..., None].astype(cd)
+
+    y = jnp.zeros((n, d), cd).at[token_for_slot.reshape(-1)].add(
+        out_e.reshape(-1, d))
+
+    # load-balance aux (Switch): E * sum_e f_e * p_e over *local* experts;
+    # summed across shards by the caller's psum it covers all experts.
+    f_e = oh.astype(jnp.float32).mean(axis=0)                   # (E_l,)
+    p_e = jax.lax.dynamic_slice_in_dim(probs.mean(axis=0), e0, e_local)
+    aux = m.n_experts * jnp.sum(f_e * p_e)
+    return y, aux
+
+
+def moe_apply(p, cfg: ModelConfig, x):
+    """x (B, S, d) -> (y (B, S, d), aux scalar)."""
+    b, s, d = x.shape
+    rules = shd.active_rules()
+    m = cfg.moe
+
+    shared = None
+    if "shared" in p:
+        shared = L.mlp(p["shared"], x, act=cfg.act,
+                       compute_dtype=cfg.compute_dtype)
+
+    if rules is None or shd.mesh_axis_size(rules.mesh, "model") == 1:
+        cap = _capacity(b * s, cfg)
+        y, aux = _moe_local(x.reshape(-1, d), p["router"], p["gate"],
+                            p["up"], p["down"], 0, cfg=cfg, cap=cap)
+        y = y.reshape(b, s, d).astype(x.dtype)
+        return (y + shared if shared is not None else y), aux
+
+    mesh = rules.mesh
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    ep = shd.mesh_axis_size(mesh, "model")
+    n_local_tokens = (b * s) // max(1, _dp_size(mesh, dp))
+    cap = _capacity(n_local_tokens, cfg)
+
+    def f(x_l, wr, wg, wu, wd):
+        nb = x_l.shape[0]
+        e0 = jax.lax.axis_index("model") * wg.shape[0]
+        y, aux = _moe_local(x_l.reshape(-1, d), wr, wg, wu, wd, e0,
+                            cfg=cfg, cap=cap)
+        y = jax.lax.psum(y, "model")
+        aux = jax.lax.pmean(jax.lax.psum(aux, "model"),
+                            dp) if dp else jax.lax.psum(aux, "model")
+        return y.reshape(nb, s, d), aux
+
+    y, aux = smap(
+        f, mesh=mesh,
+        in_specs=(P(dp if dp else None, None, None), P(None, None),
+                  P("model", None, None), P("model", None, None),
+                  P("model", None, None)),
+        out_specs=(P(dp if dp else None, None, None), P()),
+        
+    )(x, p["router"], p["gate"], p["up"], p["down"])
+    y = y.astype(x.dtype)
+    return (y + shared if shared is not None else y), aux
+
+
+def _dp_size(mesh, dp):
+    n = 1
+    for a in dp:
+        n *= shd.mesh_axis_size(mesh, a)
+    return n

@@ -1,0 +1,133 @@
+"""Blockwise attention in pure JAX (the models' default path).
+
+Prefill/train attention never materialises the (Sq, Skv) score matrix:
+an outer ``lax.map`` over query chunks runs, per chunk,
+
+  pass 1: a small-carry ``lax.scan`` over KV chunks computing the row LSE
+          (running max + sum-exp; carries are (B, Hkv, G, cq) f32), then
+  pass 2: a rematerialised ``lax.map`` over KV chunks of partial outputs
+          ``exp(logits - lse) @ v`` summed across chunks.
+
+The two-pass structure is chosen deliberately over a single online-softmax
+scan: a scan that carries the (…, cq, D) accumulator saves that carry per
+step for the backward pass (stacking to a KV-sized residual), while here
+the saved residuals are just LSE + output — the pure-JAX equivalent of the
+flash-attention backward memory profile. The TPU hot path for decode is the
+Pallas kernel in ``kernels/decode_attn.py``; this module is the oracle-
+backed default that the dry-run lowers.
+
+Supports causal masking, sliding windows (SWA), GQA/MQA grouping and
+cross-attention (``causal=False``, different Skv).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG = jnp.float32(-1e30)  # finite mask fill (avoids -inf NaN propagation)
+
+
+def _pair_mask(qpos, kpos, causal: bool, window: Optional[int]):
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        m &= qpos[:, None] >= kpos[None, :]
+    if window is not None:
+        m &= (qpos[:, None] - kpos[None, :]) < window
+    return m
+
+
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+    q_offset: int = 0,
+) -> jax.Array:
+    """q (B,Sq,Hq,D); k,v (B,Skv,Hkv,D); Hq % Hkv == 0. Returns (B,Sq,Hq,D)."""
+    b, sq, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    cq, ck = min(q_chunk, sq), min(kv_chunk, skv)
+    assert sq % cq == 0 and skv % ck == 0, "pad sequence to chunk multiples"
+    nq, nk = sq // cq, skv // ck
+    scale = 1.0 / (d ** 0.5)
+
+    qr = jnp.moveaxis(q.reshape(b, nq, cq, hkv, g, d), 1, 0)   # (nq,B,cq,Hkv,G,D)
+    kr = jnp.moveaxis(k.reshape(b, nk, ck, hkv, d), 1, 0)      # (nk,B,ck,Hkv,D)
+    vr = jnp.moveaxis(v.reshape(b, nk, ck, hkv, d), 1, 0)
+
+    def logits(qc, kc, qpos, kpos):
+        lg = jnp.einsum("bqkgd,bskd->bkgqs", qc, kc,
+                        preferred_element_type=jnp.float32) * scale
+        msk = _pair_mask(qpos, kpos, causal, window)
+        return jnp.where(msk[None, None, None], lg, NEG)
+
+    @jax.checkpoint
+    def per_q(args):
+        # rematerialised per q-chunk: the outer map's backward re-runs this
+        # (flash-attention backward memory profile — without it the scan
+        # transpose pins every chunk's (cq, ck) score block simultaneously,
+        # i.e. the full S^2 matrix per layer).
+        qi, qc = args
+        qpos = q_offset + qi * cq + jnp.arange(cq)
+
+        def p1(carry, inp):
+            m_run, l_run = carry
+            kj, kc = inp
+            kpos = kj * ck + jnp.arange(ck)
+            lg = logits(qc, kc, qpos, kpos)
+            m_new = jnp.maximum(m_run, lg.max(axis=-1))
+            l_run = l_run * jnp.exp(m_run - m_new) + \
+                jnp.exp(lg - m_new[..., None]).sum(axis=-1)
+            return (m_new, l_run), None
+
+        m0 = jnp.full((b, hkv, g, cq), NEG, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, cq), jnp.float32)
+        (m_f, l_f), _ = jax.lax.scan(p1, (m0, l0), (jnp.arange(nk), kr))
+        lse = m_f + jnp.log(l_f)
+
+        @jax.checkpoint
+        def partial(inp):
+            kj, kc, vc = inp
+            kpos = kj * ck + jnp.arange(ck)
+            lg = logits(qc, kc, qpos, kpos)
+            p = jnp.exp(lg - lse[..., None]).astype(v.dtype)
+            return jnp.einsum("bkgqs,bskd->bkgqd", p, vc)
+
+        parts = jax.lax.map(partial, (jnp.arange(nk), kr, vr))
+        out = parts.sum(axis=0)                                 # (B,Hkv,G,cq,D)
+        return jnp.moveaxis(out.reshape(b, hq, cq, d), 1, 2)    # (B,cq,Hq,D)
+
+    outs = jax.lax.map(per_q, (jnp.arange(nq), qr))             # (nq,B,cq,Hq,D)
+    return jnp.moveaxis(outs, 0, 1).reshape(b, sq, hq, d)
+
+
+def decode_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    length: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Single-token GQA decode against a (full or length-masked) KV cache.
+    q (B,Hq,D); k,v (B,S,Hkv,D). Pure-jnp path (= kernels/ref oracle);
+    the Pallas flash-decode kernel replaces this on TPU runtime."""
+    b, hq, d = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, d)
+    lg = jnp.einsum("bkgd,bskd->bkgs", qg, k,
+                    preferred_element_type=jnp.float32) / (d ** 0.5)
+    if length is not None:
+        msk = jnp.arange(s)[None, :] < length[:, None]
+        lg = jnp.where(msk[:, None, None, :], lg, NEG)
+    w = jax.nn.softmax(lg, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgs,bskd->bkgd", w, v)
+    return out.reshape(b, hq, d)

@@ -1,0 +1,108 @@
+"""Core layers (pure functions over ParamSpec-described weights)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.param import ParamSpec
+
+
+# -- normalisation -----------------------------------------------------------
+
+def rmsnorm_spec(dim: int, dtype=jnp.float32):
+    return {"scale": ParamSpec((dim,), dtype, "ones", ("embed",))}
+
+
+def rmsnorm(p, x, *, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_spec(dim: int, dtype=jnp.float32):
+    return {
+        "scale": ParamSpec((dim,), dtype, "ones", ("embed",)),
+        "bias": ParamSpec((dim,), dtype, "zeros", ("embed",)),
+    }
+
+
+def layernorm(p, x, *, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(dt)
+
+
+# -- dense -------------------------------------------------------------------
+
+def dense_spec(d_in: int, d_out: int, *, bias: bool = False,
+               axes=("embed", None), dtype=jnp.float32, init="scaled"):
+    p = {"w": ParamSpec((d_in, d_out), dtype, init, axes)}
+    if bias:
+        p["b"] = ParamSpec((d_out,), dtype, "zeros", (axes[1],))
+    return p
+
+
+def dense(p, x, compute_dtype=jnp.bfloat16):
+    y = jnp.einsum("...d,df->...f", x.astype(compute_dtype),
+                   p["w"].astype(compute_dtype))
+    if "b" in p:
+        y = y + p["b"].astype(compute_dtype)
+    return y
+
+
+# -- embedding ---------------------------------------------------------------
+
+def embedding_spec(vocab: int, dim: int, dtype=jnp.float32):
+    return {"table": ParamSpec((vocab, dim), dtype, "normal", ("vocab", "embed"))}
+
+
+def embed(p, ids, compute_dtype=jnp.bfloat16):
+    return p["table"].astype(compute_dtype)[ids]
+
+
+def unembed(p, x, compute_dtype=jnp.bfloat16):
+    """Tied LM head: logits = x @ table.T (f32 accumulation for the loss)."""
+    return jnp.einsum("...d,vd->...v", x.astype(compute_dtype),
+                      p["table"].astype(compute_dtype)).astype(jnp.float32)
+
+
+# -- activations ---------------------------------------------------------------
+
+def act_fn(name: str):
+    return {
+        "gelu": jax.nn.gelu,
+        "silu": jax.nn.silu,
+        "relu": jax.nn.relu,
+    }[name]
+
+
+# -- gated MLP (GeGLU / SwiGLU) ------------------------------------------------
+
+def mlp_spec(d_model: int, d_ff: int, *, gated: bool = True,
+             dtype=jnp.float32):
+    p = {
+        "up": ParamSpec((d_model, d_ff), dtype, "scaled", ("embed", "ffn")),
+        "down": ParamSpec((d_ff, d_model), dtype, "scaled", ("ffn", "embed")),
+    }
+    if gated:
+        p["gate"] = ParamSpec((d_model, d_ff), dtype, "scaled", ("embed", "ffn"))
+    return p
+
+
+def mlp(p, x, *, act: str = "gelu", compute_dtype=jnp.bfloat16):
+    xc = x.astype(compute_dtype)
+    up = jnp.einsum("...d,df->...f", xc, p["up"].astype(compute_dtype))
+    if "gate" in p:
+        gate = jnp.einsum("...d,df->...f", xc, p["gate"].astype(compute_dtype))
+        h = act_fn(act)(gate) * up
+    else:
+        h = act_fn(act)(up)
+    return jnp.einsum("...f,fd->...d", h, p["down"].astype(compute_dtype))

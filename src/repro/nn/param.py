@@ -1,0 +1,94 @@
+"""Parameter substrate: spec trees -> init -> sharding, without flax.
+
+A model is described once as a pytree of ``ParamSpec`` leaves (shape, dtype,
+initializer, *logical* axis names). From that single source of truth we
+derive:
+
+  * materialised parameters (``init``) with per-leaf folded PRNG keys,
+  * ``jax.ShapeDtypeStruct`` trees for AOT lowering (the dry-run never
+    allocates),
+  * ``PartitionSpec`` trees via the logical-axis rules in
+    ``repro.dist.sharding``.
+
+Logical axes used across the model zoo: "embed", "vocab", "heads",
+"kv_heads", "head_dim", "ffn", "expert", "state", "layers" (scan dim,
+never sharded), None (replicated dim).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    dtype: Any = jnp.float32
+    init: str = "normal"          # normal | zeros | ones | scaled
+    axes: tuple[Optional[str], ...] = ()
+    scale: float = 1.0            # stddev multiplier for normal/scaled
+
+    def __post_init__(self):
+        if self.axes and len(self.axes) != len(self.shape):
+            raise ValueError(f"axes {self.axes} rank != shape {self.shape}")
+
+    @property
+    def struct(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, self.dtype)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def spec_tree_structs(spec_tree):
+    """ShapeDtypeStruct tree for AOT lowering (no allocation)."""
+    return jax.tree.map(lambda s: s.struct, spec_tree, is_leaf=is_spec)
+
+
+def _materialize(key, spec: ParamSpec):
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "scaled":
+        # LeCun-style fan-in scaling on the penultimate dim
+        fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+        std = spec.scale / np.sqrt(fan_in)
+        return (std * jax.random.normal(key, spec.shape)).astype(spec.dtype)
+    std = 0.02 * spec.scale
+    return (std * jax.random.normal(key, spec.shape)).astype(spec.dtype)
+
+
+def init(spec_tree, key: jax.Array):
+    """Materialise a spec tree. Each leaf's key is folded from its tree path,
+    so initialisation is order-independent and stable under refactors."""
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(
+        spec_tree, is_leaf=is_spec)[0]
+
+    def leaf_key(path):
+        h = abs(hash(jax.tree_util.keystr(path))) % (2**31)
+        return jax.random.fold_in(key, h)
+
+    vals = {jax.tree_util.keystr(p): _materialize(leaf_key(p), s)
+            for p, s in leaves_with_path}
+
+    def fill(path, spec):
+        return vals[jax.tree_util.keystr(path)]
+
+    return jax.tree_util.tree_map_with_path(fill, spec_tree, is_leaf=is_spec)
+
+
+def count_params(spec_tree) -> int:
+    leaves = jax.tree.leaves(spec_tree, is_leaf=is_spec)
+    return int(sum(int(np.prod(s.shape)) for s in leaves))
+
+
+def param_bytes(spec_tree) -> int:
+    leaves = jax.tree.leaves(spec_tree, is_leaf=is_spec)
+    return int(sum(int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize
+                   for s in leaves))

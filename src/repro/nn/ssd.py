@@ -1,0 +1,95 @@
+"""Chunked SSD (Mamba2) scan in pure JAX — batched, differentiable.
+
+Same chunk decomposition as the PERKS kernel in ``kernels/ssm_scan.py``
+(which is validated against the per-step recurrence oracle); this is the
+models' default path and the one the dry-run lowers. The chunk loop is a
+``lax.scan`` carrying the (B, H, N, P) state — under the PERKS device-loop
+execution the whole sequence iteration runs in one dispatch.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_chunked(x, dt, a, b, c, d, *, chunk: int = 128,
+                return_state: bool = False):
+    """x (B,T,H,P); dt (B,T,H); a (H,); b,c (B,T,N); d (H,) -> y (B,T,H,P).
+    With ``return_state`` also returns the final state h (B,H,N,P) f32."""
+    bsz, t, h, p = x.shape
+    n = b.shape[-1]
+    ck = min(chunk, t)
+    assert t % ck == 0, "pad T to a chunk multiple"
+    nc = t // ck
+
+    xs = jnp.moveaxis(x.reshape(bsz, nc, ck, h, p), 1, 0)
+    dts = jnp.moveaxis(dt.reshape(bsz, nc, ck, h), 1, 0)
+    bs = jnp.moveaxis(b.reshape(bsz, nc, ck, n), 1, 0)
+    cs = jnp.moveaxis(c.reshape(bsz, nc, ck, n), 1, 0)
+
+    a32 = a.astype(jnp.float32)
+    d32 = d.astype(jnp.float32)
+
+    def per_chunk(h_prev, inp):
+        xc, dtc, bc, cc = inp
+        xc32 = xc.astype(jnp.float32)
+        dtc32 = dtc.astype(jnp.float32)
+        g = dtc32 * a32[None, None, :]                  # (B,C,H) log decay
+        cum = jnp.cumsum(g, axis=1)                     # inclusive
+
+        scores = jnp.einsum("bin,bjn->bij", cc, bc,
+                            preferred_element_type=jnp.float32)
+        li = cum[:, :, None, :] - cum[:, None, :, :]    # (B,i,j,H)
+        causal = jnp.tril(jnp.ones((xc.shape[1], xc.shape[1]), bool))
+        # mask before exp: the upper triangle overflows exp for long chunks
+        li = jnp.where(causal[None, :, :, None], li, -jnp.inf)
+        m = jnp.exp(li) * scores[..., None] * dtc32[:, None]
+        y = jnp.einsum("bijh,bjhp->bihp", m, xc32)
+
+        y += jnp.exp(cum)[..., None] * jnp.einsum(
+            "bin,bhnp->bihp", cc, h_prev, preferred_element_type=jnp.float32)
+        y += d32[None, None, :, None] * xc32
+
+        tail = jnp.exp(cum[:, -1:, :] - cum)            # (B,C,H)
+        upd = jnp.einsum("bjh,bjn,bjhp->bhnp", tail * dtc32, bc, xc32)
+        h_new = jnp.exp(cum[:, -1])[:, :, None, None] * h_prev + upd
+        return h_new, y.astype(x.dtype)
+
+    h0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    h_final, ys = jax.lax.scan(per_chunk, h0, (xs, dts, bs, cs))
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, t, h, p)
+    return (y, h_final) if return_state else y
+
+
+def ssd_step(h_prev, xt, dtt, a, bt, ct, d):
+    """One decode step. h_prev (B,H,N,P); xt (B,H,P); dtt (B,H);
+    bt,ct (B,N). Returns (h_new, yt (B,H,P))."""
+    xt32 = xt.astype(jnp.float32)
+    dt32 = dtt.astype(jnp.float32)
+    decay = jnp.exp(dt32 * a[None, :])                  # (B,H)
+    upd = dt32[..., None, None] * jnp.einsum("bn,bhp->bhnp", bt.astype(jnp.float32), xt32)
+    h_new = decay[..., None, None] * h_prev + upd
+    yt = jnp.einsum("bn,bhnp->bhp", ct.astype(jnp.float32), h_new)
+    yt = yt + d[None, :, None] * xt32
+    return h_new, yt.astype(xt.dtype)
+
+
+def causal_conv1d(x, w, bias=None):
+    """Depthwise causal conv over time. x (B,T,C); w (K,C). Left-pads K-1."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(k))
+    if bias is not None:
+        out = out + bias[None, None, :]
+    return out
+
+
+def causal_conv1d_step(state, xt, w, bias=None):
+    """One decode step of the depthwise causal conv.
+    state (B,K-1,C) holds the last K-1 inputs; xt (B,C)."""
+    k = w.shape[0]
+    window = jnp.concatenate([state, xt[:, None, :]], axis=1)  # (B,K,C)
+    out = jnp.einsum("bkc,kc->bc", window, w)
+    if bias is not None:
+        out = out + bias[None, :]
+    return window[:, 1:], out

@@ -1,0 +1,63 @@
+"""Int8 error-feedback gradient compression for the DP all-reduce.
+
+At 1000-node scale the gradient all-reduce is a dominant collective
+(§Roofline: collective term). Quantising gradients to int8 with per-leaf
+scales cuts those bytes 4x (vs f32) / 2x (vs bf16); the quantisation error
+is carried forward (error feedback), which keeps SGD/Adam convergence
+intact (Seide et al., 1-bit SGD lineage).
+
+Usage inside a train step (before ``adamw.apply``):
+
+    grads_q, err = compress_decompress(grads, err)   # all-reduce the int8
+                                                     # payload in practice
+
+On this container the all-reduce itself is exercised by the dry-run; the
+compression math + error-feedback invariants are unit-tested.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _quantize_leaf(g, err):
+    g32 = g.astype(jnp.float32) + (err if err is not None else 0.0)
+    scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    new_err = g32 - deq
+    return q, scale, deq, new_err
+
+
+def init_error(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compress(grads, err_state=None):
+    """-> (payload {q, scale} pytrees, new error state).
+
+    ``q`` int8 tensors + per-leaf f32 scales are what would cross the DP
+    all-reduce (sum of int8 payloads with rescale is done by the caller's
+    collective; here compress/decompress round-trips locally)."""
+    if err_state is None:
+        err_state = init_error(grads)
+    out = jax.tree.map(_quantize_leaf, grads, err_state)
+    istup = lambda t: isinstance(t, tuple)
+    q = jax.tree.map(lambda t: t[0], out, is_leaf=istup)
+    scale = jax.tree.map(lambda t: t[1], out, is_leaf=istup)
+    deq = jax.tree.map(lambda t: t[2], out, is_leaf=istup)
+    new_err = jax.tree.map(lambda t: t[3], out, is_leaf=istup)
+    return (q, scale), deq, new_err
+
+
+def compress_decompress(grads, err_state=None):
+    """Round-trip: returns (dequantised grads, new error state)."""
+    _, deq, new_err = compress(grads, err_state)
+    return deq, new_err
+
+
+def compression_ratio(grads) -> float:
+    """Bytes on the wire vs uncompressed (scales amortise to ~0)."""
+    total = sum(g.size * g.dtype.itemsize for g in jax.tree.leaves(grads))
+    wire = sum(g.size for g in jax.tree.leaves(grads))  # int8 = 1 B
+    return total / wire

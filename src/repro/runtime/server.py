@@ -1,0 +1,90 @@
+"""Batched serving runtime with PERKS persistent decode.
+
+Requests accumulate into a batch; the engine prefills them together and
+generates with ``Model.decode_loop`` — N tokens per dispatch with a donated
+cache (the paper's persistent-kernel execution applied to serving). The
+baseline mode dispatches ``decode_step`` per token for the benchmark
+comparison (benchmarks/decode_bench.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.lm import Model
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray           # (prompt_len,) int32
+    max_new_tokens: int = 32
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_batch: int = 8
+    persistent: bool = True      # PERKS decode_loop vs per-token host loop
+    tokens_per_dispatch: int = 32
+
+
+class Engine:
+    def __init__(self, model: Model, params, cfg: ServeConfig = ServeConfig()):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self._queue: list[Request] = []
+        self._prefill = jax.jit(
+            lambda p, b, n: model.prefill(p, b, cache_seq=n),
+            static_argnums=(2,))
+        self._decode_step = jax.jit(model.decode_step, donate_argnums=(1,))
+
+    def submit(self, req: Request):
+        self._queue.append(req)
+
+    def run_batch(self) -> tuple[np.ndarray, dict]:
+        """Serve up to max_batch queued requests (padded to equal prompt
+        length). Returns (generated tokens (B, max_new), stats)."""
+        batch = self._queue[:self.cfg.max_batch]
+        self._queue = self._queue[self.cfg.max_batch:]
+        assert batch, "no queued requests"
+        plen = max(len(r.prompt) for r in batch)
+        new = max(r.max_new_tokens for r in batch)
+        prompts = np.stack([
+            np.pad(r.prompt, (plen - len(r.prompt), 0)) for r in batch
+        ]).astype(np.int32)
+
+        t0 = time.time()
+        total = plen + new
+        logits, cache = self._prefill(
+            self.params, {"tokens": jnp.asarray(prompts)}, total)
+        first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        t_prefill = time.time() - t0
+
+        t0 = time.time()
+        if self.cfg.persistent:
+            toks, cache = self.model.decode_loop(
+                self.params, cache, first, new - 1)
+            out = np.concatenate([np.asarray(first)[:, None],
+                                  np.asarray(toks)], axis=1)
+        else:
+            out_list = [np.asarray(first)]
+            tok = first
+            for _ in range(new - 1):
+                logits, cache = self._decode_step(self.params, cache, tok)
+                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                out_list.append(np.asarray(tok))
+            out = np.stack(out_list, axis=1)
+        t_decode = time.time() - t0
+        stats = {
+            "batch": len(batch),
+            "prefill_s": t_prefill,
+            "decode_s": t_decode,
+            "tok_per_s": len(batch) * new / max(t_decode, 1e-9),
+            "mode": "persistent" if self.cfg.persistent else "host_loop",
+        }
+        return out, stats

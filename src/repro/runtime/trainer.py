@@ -1,0 +1,172 @@
+"""Fault-tolerant training loop.
+
+Large-scale posture (exercised at container scale by tests):
+
+  * **Checkpoint/restart** — atomic async checkpoints every
+    ``ckpt_every`` steps; on ANY step failure the trainer restores the
+    latest committed checkpoint (data pipeline state included — it's just
+    the step counter) and continues. ``failure_injector`` lets tests kill
+    arbitrary steps.
+  * **PERKS-fused stepping** — ``steps_per_dispatch > 1`` runs K optimizer
+    steps in one ``lax.scan`` dispatch with donated params/opt-state: the
+    training-loop instance of the paper's host-loop -> device-loop
+    transformation (fewer dispatches, carries stay device-resident).
+  * **Deterministic data** — any host regenerates any batch (see
+    repro/data/pipeline.py), so restarts/elastic resizes need no data
+    service handshake.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from pathlib import Path
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt import checkpoint as ckpt
+from repro.data.pipeline import DataConfig, synth_batch
+from repro.models.lm import Model
+from repro.optim import adamw
+from repro.runtime.steps import make_train_step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    ckpt_keep: int = 3
+    steps_per_dispatch: int = 1     # PERKS device-loop fusion of the loop
+    accum: int = 1
+    log_every: int = 10
+    max_restarts: int = 3
+
+
+class Trainer:
+    def __init__(self, model: Model, opt_cfg: adamw.AdamWConfig,
+                 data_cfg: DataConfig, tc: TrainerConfig, *,
+                 failure_injector: Optional[Callable[[int], None]] = None):
+        self.model = model
+        self.opt_cfg = opt_cfg
+        self.data_cfg = data_cfg
+        self.tc = tc
+        self.failure_injector = failure_injector
+        step_fn = make_train_step(model, opt_cfg, accum=tc.accum)
+        if tc.steps_per_dispatch > 1:
+            self._fused = self._make_fused(step_fn, tc.steps_per_dispatch)
+        self._step = jax.jit(step_fn, donate_argnums=(0, 1))
+        self.history: list[dict] = []
+        self.restarts = 0
+        self._pending: list = []
+
+    def _make_fused(self, step_fn, k):
+        def fused(params, opt_state, batches):
+            def body(carry, batch):
+                p, o = carry
+                p, o, m = step_fn(p, o, batch)
+                return (p, o), m
+            (params, opt_state), ms = jax.lax.scan(
+                body, (params, opt_state), batches)
+            return params, opt_state, jax.tree.map(lambda x: x[-1], ms)
+        return jax.jit(fused, donate_argnums=(0, 1))
+
+    # -- state ------------------------------------------------------------
+
+    def init_state(self, seed: int = 0):
+        params = self.model.init(jax.random.key(seed))
+        opt_state = adamw.init(self.opt_cfg, params)
+        return params, opt_state, 0
+
+    def _save(self, params, opt_state, step, *, sync: bool = False):
+        if self.tc.ckpt_dir is None:
+            return
+        if sync:
+            ckpt.save(self.tc.ckpt_dir, step,
+                      {"params": params, "opt": opt_state},
+                      extra={"data_step": step}, keep=self.tc.ckpt_keep)
+            return
+        self._pending.append(ckpt.save_async(
+            self.tc.ckpt_dir, step, {"params": params, "opt": opt_state},
+            extra={"data_step": step}, keep=self.tc.ckpt_keep))
+
+    def _join_saves(self):
+        for t in self._pending:
+            t.join(timeout=60)
+        self._pending.clear()
+
+    def _restore(self):
+        assert self.tc.ckpt_dir is not None
+        latest = ckpt.find_latest(self.tc.ckpt_dir)
+        if latest is None:
+            return None
+        params = self.model.init(jax.random.key(0))  # structure donor
+        opt_state = adamw.init(self.opt_cfg, params)
+        tree, extra = ckpt.restore(latest, {"params": params,
+                                            "opt": opt_state})
+        return tree["params"], tree["opt"], extra["data_step"]
+
+    def _batch(self, step):
+        toks = synth_batch(self.data_cfg, step)
+        return {"tokens": jnp.asarray(toks)}
+
+    # -- loop --------------------------------------------------------------
+
+    def run(self, *, resume: bool = True):
+        state = self._restore() if (resume and self.tc.ckpt_dir) else None
+        if state is None:
+            params, opt_state, step = self.init_state()
+            self._save(params, opt_state, 0)
+        else:
+            params, opt_state, step = state
+
+        k = self.tc.steps_per_dispatch
+        while step < self.tc.steps:
+            try:
+                if self.failure_injector is not None:
+                    self.failure_injector(step)
+                t0 = time.time()
+                if k > 1:
+                    batches = jax.tree.map(
+                        lambda *xs: jnp.stack(xs),
+                        *[self._batch(step + i) for i in range(k)])
+                    params, opt_state, metrics = self._fused(
+                        params, opt_state, batches)
+                    step += k
+                else:
+                    params, opt_state, metrics = self._step(
+                        params, opt_state, self._batch(step))
+                    step += 1
+                dt = time.time() - t0
+                rec = {"step": step,
+                       "loss": float(metrics["loss"]),
+                       "grad_norm": float(metrics["grad_norm"]),
+                       "s_per_step": dt / k}
+                self.history.append(rec)
+                if step % self.tc.log_every == 0 or step >= self.tc.steps:
+                    print(f"[train] step={step} loss={rec['loss']:.4f} "
+                          f"gnorm={rec['grad_norm']:.3f} "
+                          f"{rec['s_per_step']*1e3:.1f} ms/step", flush=True)
+                if self.tc.ckpt_dir and step % self.tc.ckpt_every == 0:
+                    self._save(params, opt_state, step)
+            except (KeyboardInterrupt, SystemExit):
+                raise
+            except Exception as e:  # noqa: BLE001 — node-failure path
+                self.restarts += 1
+                print(f"[train] step {step} failed ({type(e).__name__}: {e});"
+                      f" restart {self.restarts}/{self.tc.max_restarts}",
+                      flush=True)
+                if self.restarts > self.tc.max_restarts or not self.tc.ckpt_dir:
+                    raise
+                self._join_saves()
+                restored = self._restore()
+                if restored is None:
+                    params, opt_state, step = self.init_state()
+                else:
+                    params, opt_state, step = restored
+        self._join_saves()
+        if self.tc.ckpt_dir:
+            self._save(params, opt_state, step, sync=True)
+        return params, opt_state, step

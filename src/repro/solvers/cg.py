@@ -1,0 +1,169 @@
+"""Conjugate-gradient solver under the PERKS execution model (paper §V-C).
+
+Execution tiers (Fig. 7/9 reproduction):
+  * ``host_loop``   — one dispatch per CG iteration (baseline; the role
+                      Ginkgo's per-iteration kernel launches play).
+  * ``device_loop`` — PERKS control flow: iterations fused via
+                      ``lax.fori_loop``; periodic host sync for convergence
+                      checks (``sync_every``).
+  * fused kernel    — ``kernels/cg_fused.py``: the whole loop inside one
+                      Pallas kernel, vectors VMEM-resident; matrix resident
+                      (MIX) or streamed (VEC) per the caching policy.
+
+Caching policies (Fig. 9): IMP = device_loop, nothing explicitly resident;
+VEC = vectors resident, A streamed; MAT/MIX = vectors + matrix resident.
+The policy ranking comes from ``core.cache_policy.cg_arrays`` (r > A).
+
+Synthetic SPD datasets stand in for SuiteSparse (offline container):
+2D Poisson operators and banded random SPD matrices, sized to straddle the
+on-chip capacity boundary the way Fig. 7 straddles L2.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import perks
+from repro.dist.sharding import smap
+from repro.core.cache_policy import cg_arrays, plan_caching
+from repro.core.hardware import Chip, TPU_V5E
+from repro.kernels import ref as kref
+from repro.kernels import ops as kops
+from repro.kernels.spmv_ell import poisson2d_ell
+
+
+# -- datasets -------------------------------------------------------------------
+
+def banded_spd_ell(n: int, bands: int, seed: int = 0, dtype=np.float32):
+    """Random symmetric positive-definite banded matrix in ELL form."""
+    rng = np.random.default_rng(seed)
+    k = 2 * bands + 1
+    data = np.zeros((n, k), dtype)
+    cols = np.zeros((n, k), np.int32)
+    offs = rng.standard_normal((n, bands)).astype(dtype) * 0.1
+    for i in range(n):
+        slot = 0
+        data[i, slot] = 1.0 + bands * 0.2       # diagonal dominance -> SPD
+        cols[i, slot] = i
+        slot += 1
+        for b in range(1, bands + 1):
+            for j in (i - b, i + b):
+                if 0 <= j < n:
+                    v = offs[min(i, j), b - 1]
+                    data[i, slot] = v
+                    cols[i, slot] = j
+                    slot += 1
+    return data, cols
+
+
+DATASETS = {
+    # name: (constructor, kwargs) — sizes straddle the VMEM capacity
+    "poisson_64": (poisson2d_ell, {"side": 64}),
+    "poisson_128": (poisson2d_ell, {"side": 128}),
+    "poisson_256": (poisson2d_ell, {"side": 256}),
+    "banded_4k": (banded_spd_ell, {"n": 4096, "bands": 4}),
+    "banded_16k": (banded_spd_ell, {"n": 16384, "bands": 8}),
+    "banded_64k": (banded_spd_ell, {"n": 65536, "bands": 4}),
+}
+
+
+def load_dataset(name: str):
+    fn, kw = DATASETS[name]
+    data, cols = fn(**kw)
+    return jnp.asarray(data), jnp.asarray(cols)
+
+
+# -- execution tiers -------------------------------------------------------------
+
+def run_host_loop(data, cols, b, iters: int):
+    state = (jnp.zeros_like(b), b, b, jnp.vdot(b, b))
+    step = functools.partial(kref.cg_iteration, data=data, cols=cols)
+    state = perks.host_loop(step, iters)(state)
+    return state[0], state[3]
+
+
+def run_device_loop(data, cols, b, iters: int, *,
+                    sync_every: Optional[int] = None,
+                    tol: Optional[float] = None):
+    state = (jnp.zeros_like(b), b, b, jnp.vdot(b, b))
+    step = functools.partial(kref.cg_iteration, data=data, cols=cols)
+    on_sync = None
+    if tol is not None:
+        thresh = tol * float(jnp.vdot(b, b))
+        on_sync = lambda s, k: float(s[3]) < thresh
+    runner = perks.persistent(
+        step, iters, perks.PerksConfig(sync_every=sync_every), on_sync=on_sync)
+    state = runner(state)
+    return state[0], state[3]
+
+
+def run_fused(data, cols, b, iters: int, *, policy: str = "MIX",
+              block_rows: int = 256):
+    """policy: VEC (A streamed) | MAT/MIX (A resident)."""
+    resident = policy in ("MAT", "MIX")
+    x, rr = kops.cg(data, cols, b, iters=iters, resident_matrix=resident,
+                    block_rows=block_rows)
+    return x, rr[0]
+
+
+def plan_policy(n_rows: int, nnz: int, dtype_bytes: int = 4, *,
+                chip: Chip = TPU_V5E) -> dict:
+    """Which Fig.-9 policy the cache planner selects for this problem."""
+    plan = plan_caching(cg_arrays(n_rows, nnz, dtype_bytes),
+                        int(chip.onchip_bytes * 0.9))
+    vec_frac = min(plan.fraction_of(n) for n in ("r", "p", "x", "Ap"))
+    mat_frac = plan.fraction_of("A")
+    if vec_frac < 1.0:
+        policy = "IMP"          # vectors don't even fit -> rely on caches
+    elif mat_frac >= 1.0:
+        policy = "MIX"
+    elif mat_frac > 0.0:
+        policy = "MIX"          # partial matrix residency
+    else:
+        policy = "VEC"
+    return {"policy": policy, "vector_fraction": vec_frac,
+            "matrix_fraction": mat_frac,
+            "traffic_saved_per_iter": plan.traffic_saved_per_step}
+
+
+# -- distributed CG ---------------------------------------------------------------
+
+def run_distributed(data, cols, b, iters: int, mesh: Mesh, *,
+                    axis: str = "data"):
+    """Row-partitioned CG: local SpMV gathers the global p (all-gather),
+    dot products psum — the collective IS the paper's device barrier."""
+    n = b.shape[0]
+
+    def step(state):
+        x, r, p, rr = state
+
+        def local(iter_data, iter_cols, p_full, x_l, r_l, p_l, rr_s):
+            from repro.kernels.ref import _safe_div
+            ap_l = jnp.sum(iter_data * p_full[iter_cols], axis=1)
+            pap = jax.lax.psum(jnp.vdot(p_l, ap_l), axis)
+            alpha = _safe_div(rr_s, pap)
+            x_l = x_l + alpha * p_l
+            r_l = r_l - alpha * ap_l
+            rr_new = jax.lax.psum(jnp.vdot(r_l, r_l), axis)
+            beta = _safe_div(rr_new, rr_s)
+            p_l = r_l + beta * p_l
+            return x_l, r_l, p_l, rr_new
+
+        return smap(
+            local, mesh=mesh,
+            in_specs=(P(axis, None), P(axis, None), P(), P(axis), P(axis),
+                      P(axis), P()),
+            out_specs=(P(axis), P(axis), P(axis), P()),
+            
+        )(data, cols, p, x, r, p, rr)
+
+    state = (jnp.zeros_like(b), b, b, jnp.vdot(b, b))
+    with mesh:
+        state = perks.device_loop(step, iters)(state)
+    return state[0], state[3]

@@ -1,0 +1,114 @@
+"""System-level iterative stencil solver under the PERKS execution model.
+
+Three single-chip execution tiers (all bit-identical results):
+  * ``host_loop``   — one dispatch per time step (the paper's baseline),
+  * ``device_loop`` — PERKS control-flow: all steps fused in one dispatch
+                      (``lax.fori_loop`` + donation),
+  * ``resident``    — the full PERKS scheme via the Pallas kernels
+                      (time loop inside the kernel, domain rows resident
+                      in VMEM; cached-row count from the cache policy).
+
+plus the multi-chip runner: row-partitioned domain inside ``shard_map``,
+per-step halo ``ppermute`` (the device-wide barrier), PERKS device-loop
+over time. Works on any mesh axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import perks
+from repro.dist.sharding import smap
+from repro.core.cache_policy import plan_caching, stencil_arrays
+from repro.core.hardware import Chip, TPU_V5E
+from repro.dist.collectives import halo_exchange
+from repro.kernels.common import StencilSpec, get_spec
+from repro.kernels import ref as kref
+from repro.kernels import ops as kops
+from repro.kernels.stencil3d import plan_resident_planes
+
+
+# -- single chip ---------------------------------------------------------------
+
+def run_host_loop(x, spec: StencilSpec, steps: int):
+    """Baseline: one jit dispatch per step (kernel 'terminates' each step)."""
+    step = functools.partial(kref.stencil_step, spec=spec)
+    return perks.host_loop(step, steps)(x)
+
+def run_device_loop(x, spec: StencilSpec, steps: int):
+    """PERKS control-flow transform at the XLA level."""
+    step = functools.partial(kref.stencil_step, spec=spec)
+    return perks.device_loop(step, steps)(x)
+
+
+def run_resident(x, spec: StencilSpec, steps: int, *,
+                 chip: Chip = TPU_V5E, cached_rows: Optional[int] = None,
+                 sub_rows: int = 128):
+    """Full PERKS: Pallas kernel, VMEM-resident rows chosen by the cache
+    policy (interior-first; halo never cached)."""
+    if cached_rows is None:
+        cached_rows = plan_resident_planes(
+            x.shape, x.dtype.itemsize, spec, chip=chip, sub_rows=sub_rows)
+    if cached_rows >= x.shape[0]:
+        return kops.stencil_resident(x, spec=spec, steps=steps)
+    return kops.stencil_perks(x, spec=spec, steps=steps,
+                              cached_rows=cached_rows, sub_rows=sub_rows)
+
+
+def plan_for(x_shape, dtype_bytes, spec: StencilSpec, *,
+             chip: Chip = TPU_V5E, sub_rows: int = 128):
+    """Cache plan + projected speedup for reporting (paper Eqs. 5-11)."""
+    rows = plan_resident_planes(x_shape, dtype_bytes, spec, chip=chip,
+                                sub_rows=sub_rows)
+    row_elems = 1
+    for d in x_shape[1:]:
+        row_elems *= d
+    domain = int(jnp.prod(jnp.array(x_shape)))
+    cached = rows * row_elems
+    return {"cached_rows": rows, "cached_cells": cached,
+            "cached_fraction": cached / domain}
+
+
+# -- multi chip ----------------------------------------------------------------
+
+def make_distributed_step(spec: StencilSpec, mesh: Mesh, axis: str = "data"):
+    """One distributed time step: halo exchange + local update, inside
+    shard_map over ``axis`` (leading-dim row partition)."""
+    r = spec.radius
+
+    def local_step(x_l):
+        top, bot = halo_exchange(x_l, r, axis)
+        xp = jnp.concatenate([top, x_l, bot], axis=0)
+        upd = spec.apply_rows(xp, r, xp.shape[0] - r)
+        # global Dirichlet border: freeze first/last `r` rows of the
+        # *global* domain (shards at the ends)
+        n = jax.lax.axis_size(axis)
+        idx = jax.lax.axis_index(axis)
+        out = upd
+        row = jnp.arange(x_l.shape[0])
+        is_top_edge = (idx == 0) & (row < r)
+        is_bot_edge = (idx == n - 1) & (row >= x_l.shape[0] - r)
+        frozen = is_top_edge | is_bot_edge
+        shape = (x_l.shape[0],) + (1,) * (x_l.ndim - 1)
+        return jnp.where(frozen.reshape(shape), x_l, out)
+
+    pspec = P(axis, *([None] * (spec.ndim - 1)))
+    return smap(local_step, mesh=mesh, in_specs=(pspec,),
+                out_specs=pspec)
+
+
+def run_distributed(x, spec: StencilSpec, steps: int, mesh: Mesh,
+                    *, axis: str = "data",
+                    execution: perks.Execution = perks.Execution.DEVICE_LOOP):
+    """Multi-chip PERKS stencil: per-step halo ppermute is the device-wide
+    barrier; the time loop is fused (DEVICE_LOOP) or host-driven."""
+    step = make_distributed_step(spec, mesh, axis)
+    runner = perks.persistent(step, steps,
+                              perks.PerksConfig(execution=execution))
+    with mesh:
+        return runner(x)

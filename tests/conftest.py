@@ -1,0 +1,11 @@
+import numpy as np
+import pytest
+
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
+# single real CPU device (the dry-run sets its own flags; multi-device tests
+# spawn subprocesses).
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,173 @@
+"""Distributed tests — spawn subprocesses with fake multi-device CPU so the
+main test process keeps seeing exactly one device (assignment requirement).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _run(code: str, n_dev: int = 8, timeout=360) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
+    env["PYTHONPATH"] = str(REPO / "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=timeout)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def test_distributed_stencil_matches_single():
+    res = _run("""
+        import json, jax, jax.numpy as jnp, numpy as np
+        from repro.kernels.common import get_spec
+        from repro.kernels import ref
+        from repro.solvers import stencil
+        mesh = jax.make_mesh((8,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        spec = get_spec("2ds9pt")
+        x = jax.random.normal(jax.random.key(0), (64, 128), jnp.float32)
+        got = stencil.run_distributed(x, spec, 7, mesh)
+        want = ref.stencil_run(x, spec, 7)
+        print(json.dumps({"err": float(jnp.abs(got - want).max())}))
+    """)
+    assert res["err"] < 1e-5
+
+
+def test_distributed_cg_matches_single():
+    res = _run("""
+        import json, jax, jax.numpy as jnp
+        from repro.solvers import cg
+        from repro.kernels import ref
+        mesh = jax.make_mesh((8,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        data, cols = cg.load_dataset("poisson_64")
+        b = jax.random.normal(jax.random.key(1), (data.shape[0],), jnp.float32)
+        x_d, rr_d = cg.run_distributed(data, cols, b, 15, mesh)
+        x_s, rr_s = ref.cg_run(data, cols, b, 15)
+        print(json.dumps({
+            "err": float(jnp.abs(x_d - x_s).max()),
+            "rr_rel": float(abs(rr_d - rr_s) / rr_s)}))
+    """)
+    assert res["err"] < 1e-3 and res["rr_rel"] < 1e-3
+
+
+def test_sharded_flash_decode_matches_ref():
+    res = _run("""
+        import json, jax, jax.numpy as jnp
+        from repro.dist.collectives import sharded_decode_attention
+        from repro.kernels import ref
+        mesh = jax.make_mesh((8,), ("model",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        B, Hq, Hkv, S, D = 2, 8, 2, 256, 32
+        ks = jax.random.split(jax.random.key(0), 3)
+        q = jax.random.normal(ks[0], (B, Hq, D), jnp.float32)
+        k = jax.random.normal(ks[1], (B, S, Hkv, D), jnp.float32)
+        v = jax.random.normal(ks[2], (B, S, Hkv, D), jnp.float32)
+        length = jnp.array([200, 256], jnp.int32)
+        with mesh:
+            got = sharded_decode_attention(q, k, v, mesh=mesh,
+                                           seq_axis="model", length=length)
+        want = ref.decode_attention(q, k, v, length=length)
+        print(json.dumps({"err": float(jnp.abs(got - want).max())}))
+    """)
+    assert res["err"] < 1e-4
+
+
+def test_pipeline_parallel_matches_sequential():
+    res = _run("""
+        import json, jax, jax.numpy as jnp, numpy as np
+        from repro.dist.pipeline import pipeline_apply, bubble_fraction
+        mesh = jax.make_mesh((4,), ("stage",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        n_stages, n_micro, mb, d = 4, 8, 2, 16
+        key = jax.random.key(0)
+        w = jax.random.normal(key, (n_stages, d, d)) / jnp.sqrt(d)
+        xs = jax.random.normal(jax.random.key(1), (n_micro, mb, d))
+        stage_fn = lambda p, h: jnp.tanh(h @ p["w"])
+        with mesh:
+            got = pipeline_apply(stage_fn, {"w": w}, xs, mesh=mesh,
+                                 stage_axis="stage")
+        want = xs
+        for s in range(n_stages):
+            want = jnp.tanh(want @ w[s])
+        print(json.dumps({
+            "err": float(jnp.abs(got - want).max()),
+            "bubble": bubble_fraction(n_micro, n_stages)}))
+    """)
+    assert res["err"] < 1e-5
+    assert abs(res["bubble"] - 3 / 11) < 1e-9
+
+
+def test_moe_ep_matches_single_device():
+    """Expert-parallel shard_map MoE == single-device routing."""
+    res = _run("""
+        import json, jax, jax.numpy as jnp
+        from repro.configs.registry import get_smoke_config
+        from repro.dist import sharding as shd
+        from repro.models import moe as moe_lib
+        from repro.models.lm import Model
+        cfg = get_smoke_config("qwen3-moe-235b-a22b")
+        m = Model(cfg)
+        params = m.init(jax.random.key(0))
+        lp = jax.tree.map(lambda p: p[0], params["layers"])
+        x = jax.random.normal(jax.random.key(2), (2, 16, cfg.d_model),
+                              jnp.bfloat16)
+        y_single, aux_single = moe_lib.moe_apply(lp["mlp"], cfg, x)
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        rules = shd.make_rules(mesh)
+        with mesh, shd.use_rules(rules):
+            y_ep, aux_ep = jax.jit(
+                lambda p, x: moe_lib.moe_apply(p, cfg, x))(lp["mlp"], x)
+        per_tok = jnp.abs(y_ep.astype(jnp.float32)
+                          - y_single.astype(jnp.float32)).max(-1)
+        frac_bad = float((per_tok > 0.1).mean())
+        med = float(jnp.median(per_tok))
+        print(json.dumps({
+            "frac_bad": frac_bad, "median": med,
+            "aux_rel": float(abs(aux_ep - aux_single) / (abs(aux_single) + 1e-9))}))
+    """, n_dev=8)
+    # per-shard capacity (and bf16 router near-ties) can drop/route a few
+    # tokens differently between the single-device and EP paths; demand
+    # that almost all tokens agree and the rest is bounded drop noise
+    assert res["frac_bad"] <= 0.2, res
+    assert res["median"] < 0.05, res
+    assert res["aux_rel"] < 0.25, res
+
+
+def test_elastic_checkpoint_across_mesh_sizes(tmp_path):
+    """Save on 8 devices, restore on 4 — logical checkpoint reshards."""
+    code = f"""
+        import json, jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.ckpt import checkpoint as ckpt
+        n = len(jax.devices())
+        mesh = jax.make_mesh((n,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        w = jax.device_put(jnp.arange(64.0).reshape(8, 8),
+                           NamedSharding(mesh, P("data", None)))
+        tree = {{"w": w}}
+        import pathlib
+        d = pathlib.Path({str(tmp_path)!r})
+        if n == 8:
+            ckpt.save(d, 1, tree)
+            print(json.dumps({{"saved": True}}))
+        else:
+            got, _ = ckpt.restore(ckpt.find_latest(d), tree,
+                                  shardings={{"w": NamedSharding(mesh, P("data", None))}})
+            ok = bool((np.asarray(got["w"]) ==
+                       np.arange(64.0).reshape(8, 8)).all())
+            print(json.dumps({{"ok": ok,
+                               "nshards": len(got["w"].sharding.device_set)}}))
+    """
+    assert _run(code, n_dev=8)["saved"]
+    res = _run(code, n_dev=4)
+    assert res["ok"] and res["nshards"] == 4

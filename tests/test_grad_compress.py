@@ -1,0 +1,53 @@
+"""Int8 error-feedback gradient compression invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import grad_compress as gc
+
+
+def _tree(key, scale=1.0):
+    k1, k2 = jax.random.split(key)
+    return {"w": jax.random.normal(k1, (32, 16)) * scale,
+            "b": jax.random.normal(k2, (16,)) * scale}
+
+
+def test_roundtrip_error_bounded():
+    g = _tree(jax.random.key(0))
+    deq, err = gc.compress_decompress(g)
+    for a, b in zip(jax.tree.leaves(deq), jax.tree.leaves(g)):
+        scale = float(jnp.max(jnp.abs(b))) / 127.0
+        assert float(jnp.abs(a - b).max()) <= scale * 0.5 + 1e-6
+
+
+def test_error_feedback_unbiased_over_steps():
+    """With a CONSTANT gradient, error feedback makes the accumulated
+    dequantised sum converge to the true sum (bias -> 0)."""
+    g = _tree(jax.random.key(1), scale=0.3)
+    err = None
+    acc = jax.tree.map(jnp.zeros_like, g)
+    n = 50
+    for _ in range(n):
+        deq, err = gc.compress_decompress(g, err)
+        acc = jax.tree.map(jnp.add, acc, deq)
+    for a, b in zip(jax.tree.leaves(acc), jax.tree.leaves(g)):
+        np.testing.assert_allclose(a / n, b, atol=5e-3)
+
+
+@given(st.integers(0, 10_000), st.floats(1e-3, 1e3))
+@settings(max_examples=20, deadline=None)
+def test_quantization_range(seed, scale):
+    g = {"w": jax.random.normal(jax.random.key(seed), (8, 8)) * scale}
+    (q, s), deq, err = gc.compress(g)
+    assert q["w"].dtype == jnp.int8
+    assert int(jnp.abs(q["w"]).max()) <= 127
+    # error is bounded by half a quantisation step
+    assert float(jnp.abs(err["w"]).max()) <= float(s["w"]) * 0.5 + 1e-6
+
+
+def test_compression_ratio():
+    g = {"w": jnp.zeros((128, 128), jnp.float32)}
+    assert gc.compression_ratio(g) == 4.0
+    g16 = {"w": jnp.zeros((128, 128), jnp.bfloat16)}
+    assert gc.compression_ratio(g16) == 2.0

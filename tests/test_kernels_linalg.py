@@ -1,0 +1,87 @@
+"""Kernel allclose sweeps: SpMV, fused CG, SSD scan, decode attention."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.spmv_ell import poisson2d_ell, dense_to_ell
+
+KEY = jax.random.key(1)
+
+
+@pytest.mark.parametrize("side,block_rows", [(8, 32), (16, 64), (16, 256)])
+def test_spmv_poisson(side, block_rows):
+    data, cols = poisson2d_ell(side)
+    n = side * side
+    x = jax.random.normal(KEY, (n,), jnp.float32)
+    got = ops.spmv(jnp.asarray(data), jnp.asarray(cols), x,
+                   block_rows=min(block_rows, n))
+    want = ref.spmv_ell(jnp.asarray(data), jnp.asarray(cols), x)
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+def test_spmv_dense_roundtrip(rng):
+    a = rng.standard_normal((64, 64)).astype(np.float32)
+    a[np.abs(a) < 1.0] = 0.0
+    data, cols = dense_to_ell(a)
+    x = rng.standard_normal(64).astype(np.float32)
+    got = ops.spmv(jnp.asarray(data), jnp.asarray(cols), jnp.asarray(x),
+                   block_rows=32)
+    np.testing.assert_allclose(got, a @ x, atol=1e-4)
+
+
+@pytest.mark.parametrize("resident", [True, False])
+@pytest.mark.parametrize("iters", [1, 5, 20])
+def test_cg_fused_matches_ref(resident, iters):
+    data, cols = poisson2d_ell(16)
+    b = jax.random.normal(KEY, (256,), jnp.float32)
+    xg, rrg = ops.cg(jnp.asarray(data), jnp.asarray(cols), b, iters=iters,
+                     resident_matrix=resident, block_rows=64)
+    xw, rrw = ref.cg_run(jnp.asarray(data), jnp.asarray(cols), b, iters)
+    np.testing.assert_allclose(xg, xw, rtol=1e-3, atol=1e-5)
+    np.testing.assert_allclose(rrg[0], rrw, rtol=1e-3)
+
+
+def test_cg_converges():
+    data, cols = poisson2d_ell(16)
+    b = jax.random.normal(KEY, (256,), jnp.float32)
+    _, rr = ops.cg(jnp.asarray(data), jnp.asarray(cols), b, iters=120,
+                   resident_matrix=True, block_rows=64)
+    assert float(rr[0]) < 1e-6 * float(jnp.vdot(b, b))
+
+
+@pytest.mark.parametrize("chunk", [8, 16, 64])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_scan(chunk, dtype):
+    B, T, H, P, N = 2, 64, 4, 8, 16
+    ks = jax.random.split(KEY, 6)
+    x = (jax.random.normal(ks[0], (B, T, H, P)) * 0.5).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, H))).astype(dtype)
+    a = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    b = (jax.random.normal(ks[3], (B, T, N)) * 0.5).astype(dtype)
+    c = (jax.random.normal(ks[4], (B, T, N)) * 0.5).astype(dtype)
+    d = jax.random.normal(ks[5], (H,))
+    got = ops.ssd_scan(x, dt, a, b, c, d, chunk=chunk)
+    want = jax.vmap(
+        lambda x_, dt_, b_, c_: ref.ssm_scan(
+            x_.astype(jnp.float32), dt_.astype(jnp.float32), a,
+            b_.astype(jnp.float32), c_.astype(jnp.float32), d)
+    )(x, dt, b, c)
+    tol = 1e-3 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("hq,hkv", [(8, 8), (8, 2), (4, 1)])
+@pytest.mark.parametrize("s,block_s", [(128, 32), (256, 256), (96, 32)])
+def test_decode_attention(hq, hkv, s, block_s):
+    B, D = 2, 32
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, hq, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, s, hkv, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, s, hkv, D), jnp.float32)
+    got = ops.decode_attention(q, k, v, block_s=block_s)
+    want = ref.decode_attention(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)

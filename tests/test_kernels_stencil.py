@@ -1,0 +1,88 @@
+"""Per-kernel allclose sweeps vs the pure-jnp oracle: PERKS stencils.
+
+Sweeps every Table-III benchmark x dtypes x residency fractions, matching
+the assignment's "sweep shapes/dtypes and assert_allclose against ref.py".
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.common import BENCHMARKS, get_spec, StencilSpec
+from repro.kernels.stencil2d import (stencil_perks, stencil_resident,
+                                     stencil_baseline_step)
+
+KEY = jax.random.key(0)
+NAMES_2D = [n for n, s in BENCHMARKS.items() if s.ndim == 2]
+NAMES_3D = [n for n, s in BENCHMARKS.items() if s.ndim == 3]
+
+
+@pytest.mark.parametrize("name", NAMES_2D)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_resident_matches_ref_2d(name, dtype):
+    spec = get_spec(name)
+    x = jax.random.normal(KEY, (48, 128), dtype)
+    got = stencil_resident(x, spec, steps=4)
+    want = ref.stencil_run(x, spec, 4)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("name", NAMES_2D)
+@pytest.mark.parametrize("cached_rows", [0, 16, 32, 64])
+def test_perks_partial_caching_2d(name, cached_rows):
+    spec = get_spec(name)
+    x = jax.random.normal(KEY, (64, 128), jnp.float32)
+    got = stencil_perks(x, spec, steps=5, cached_rows=cached_rows,
+                        sub_rows=16)
+    want = ref.stencil_run(x, spec, 5)
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", NAMES_3D)
+def test_perks_3d(name):
+    spec = get_spec(name)
+    x = jax.random.normal(KEY, (24, 16, 128), jnp.float32)
+    got = stencil_perks(x, spec, steps=3, cached_rows=8, sub_rows=8)
+    want = ref.stencil_run(x, spec, 3)
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+@pytest.mark.parametrize("shape", [(32, 128), (40, 256), (64, 136)])
+def test_shape_sweep_2d5pt(shape):
+    spec = get_spec("2d5pt")
+    x = jax.random.normal(KEY, shape, jnp.float32)
+    got = stencil_perks(x, spec, steps=4, cached_rows=16, sub_rows=8)
+    want = ref.stencil_run(x, spec, 4)
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+def test_baseline_step_equals_one_ref_step():
+    spec = get_spec("2d9pt")
+    x = jax.random.normal(KEY, (32, 128), jnp.float32)
+    got = stencil_baseline_step(x, spec, sub_rows=8)
+    want = ref.stencil_step(x, spec)
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+def test_custom_spec_random_weights():
+    rngk = jax.random.key(3)
+    w = jax.random.uniform(rngk, (5,))
+    w = tuple((w / w.sum()).tolist())
+    spec = StencilSpec("custom", 2, get_spec("2d5pt").offsets, w)
+    x = jax.random.normal(KEY, (32, 128), jnp.float32)
+    got = stencil_perks(x, spec, steps=6, cached_rows=32, sub_rows=8)
+    want = ref.stencil_run(x, spec, 6)
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+def test_boundary_frozen():
+    spec = get_spec("2ds9pt")  # radius 2
+    x = jax.random.normal(KEY, (32, 128), jnp.float32)
+    got = stencil_perks(x, spec, steps=3, cached_rows=16, sub_rows=8)
+    r = spec.radius
+    np.testing.assert_array_equal(got[:r], x[:r])
+    np.testing.assert_array_equal(got[-r:], x[-r:])
+    np.testing.assert_array_equal(got[:, :r], x[:, :r])

@@ -1,0 +1,147 @@
+"""End-to-end behaviour of the paper's system: solvers under the PERKS
+execution model, caching policies, HLO cost accounting, serving engine."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hlo_costs
+from repro.kernels import ref
+from repro.kernels.common import get_spec
+from repro.solvers import cg as cg_solver
+from repro.solvers import stencil as stencil_solver
+
+KEY = jax.random.key(0)
+
+
+# -- stencil system ----------------------------------------------------------
+
+def test_stencil_execution_tiers_identical():
+    spec = get_spec("2d13pt")
+    x = jax.random.normal(KEY, (64, 128), jnp.float32)
+    a = stencil_solver.run_host_loop(x, spec, 5)
+    b = stencil_solver.run_device_loop(x, spec, 5)
+    c = stencil_solver.run_resident(x, spec, 5, cached_rows=32, sub_rows=16)
+    want = ref.stencil_run(x, spec, 5)
+    for got in (a, b, c):
+        np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+def test_stencil_cache_plan_reporting():
+    spec = get_spec("2d5pt")
+    plan = stencil_solver.plan_for((4096, 4096), 4, spec)
+    assert 0 < plan["cached_rows"] <= 4096
+    assert 0 < plan["cached_fraction"] <= 1.0
+    # small domain fully cached
+    plan_small = stencil_solver.plan_for((1024, 1024), 4, spec)
+    assert plan_small["cached_fraction"] == 1.0
+
+
+# -- CG system ----------------------------------------------------------------
+
+def test_cg_tiers_agree_and_converge():
+    data, cols = cg_solver.load_dataset("poisson_64")
+    b = jax.random.normal(KEY, (data.shape[0],), jnp.float32)
+    x_h, rr_h = cg_solver.run_host_loop(data, cols, b, 25)
+    x_d, rr_d = cg_solver.run_device_loop(data, cols, b, 25)
+    x_f, rr_f = cg_solver.run_fused(data, cols, b, 25, policy="MIX")
+    np.testing.assert_allclose(x_h, x_d, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(x_h, x_f, rtol=1e-3, atol=1e-4)
+    assert float(rr_d) < float(jnp.vdot(b, b))
+
+
+def test_cg_early_stop_on_convergence():
+    data, cols = cg_solver.load_dataset("poisson_64")
+    b = jax.random.normal(KEY, (data.shape[0],), jnp.float32)
+    x, rr = cg_solver.run_device_loop(data, cols, b, 500, sync_every=25,
+                                      tol=1e-10)
+    assert float(rr) < 1e-10 * float(jnp.vdot(b, b)) * 10
+
+
+def test_cg_policy_planner():
+    # small problem: everything fits -> MIX
+    assert cg_solver.plan_policy(10_000, 50_000)["policy"] == "MIX"
+    # huge problem: vectors alone exceed VMEM -> IMP
+    assert cg_solver.plan_policy(10**9, 10**10)["policy"] == "IMP"
+    # vectors fit, matrix does not fit at all -> policy still caches vectors
+    mid = cg_solver.plan_policy(10**6, 3 * 10**8)
+    assert mid["vector_fraction"] == 1.0
+
+
+# -- HLO cost accounting --------------------------------------------------------
+
+def test_hlo_costs_exact_on_matmul():
+    f = jax.jit(lambda a, b: a @ b)
+    c = f.lower(jnp.zeros((512, 256)), jnp.zeros((256, 128))).compile()
+    hc = hlo_costs.analyze(c.as_text())
+    assert abs(hc.flops - 2 * 512 * 256 * 128) / hc.flops < 1e-6
+
+
+def test_hlo_costs_scan_trip_counts():
+    def step(c, _):
+        return c @ jnp.eye(128), None
+    g = jax.jit(lambda c: jax.lax.scan(step, c, None, length=12))
+    c = g.lower(jnp.zeros((128, 128))).compile()
+    hc = hlo_costs.analyze(c.as_text())
+    want = 12 * 2 * 128 ** 3
+    assert abs(hc.flops - want) / want < 1e-6
+    assert hc.flops_scale > 10  # raw count misses the trip count
+
+
+def test_hlo_costs_collectives(tmp_path):
+    """Collectives inside scan bodies are multiplied by trip count."""
+    import subprocess, sys, os, textwrap, json
+    from pathlib import Path
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = str(Path(__file__).resolve().parent.parent / "src")
+    code = textwrap.dedent("""
+        import json, jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.core import hlo_costs
+        mesh = jax.make_mesh((4,), ("d",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        sh = NamedSharding(mesh, P("d", None))
+        def step(c, _):
+            s = c.sum()                      # all-reduce per step
+            return c + s, None
+        f = jax.jit(lambda c: jax.lax.scan(step, c, None, length=10)[0],
+                    in_shardings=sh, out_shardings=sh)
+        comp = f.lower(jax.ShapeDtypeStruct((64, 64), jnp.float32,
+                                            sharding=sh)).compile()
+        hc = hlo_costs.analyze(comp.as_text())
+        print(json.dumps({"ar": hc.coll_count.get("all-reduce", 0)}))
+    """)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=240)
+    assert out.returncode == 0, out.stderr[-2000:]
+    ar = json.loads(out.stdout.strip().splitlines()[-1])["ar"]
+    assert ar >= 10  # one per scan step, trip-multiplied
+
+
+# -- serving engine --------------------------------------------------------------
+
+def test_engine_persistent_matches_host_loop():
+    from repro.configs.registry import get_smoke_config
+    from repro.models.lm import Model
+    from repro.runtime.server import Engine, Request, ServeConfig
+
+    cfg = get_smoke_config("h2o-danube-1.8b")
+    model = Model(cfg)
+    params = model.init(KEY)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, 16, dtype=np.int32)
+               for _ in range(3)]
+
+    def serve(persistent):
+        eng = Engine(model, params, ServeConfig(max_batch=4,
+                                                persistent=persistent))
+        for p in prompts:
+            eng.submit(Request(prompt=p, max_new_tokens=8))
+        toks, stats = eng.run_batch()
+        return toks, stats
+
+    t_perks, s_perks = serve(True)
+    t_base, s_base = serve(False)
+    np.testing.assert_array_equal(t_perks, t_base)
+    assert s_perks["mode"] == "persistent"
