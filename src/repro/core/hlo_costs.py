@@ -91,21 +91,28 @@ _DOT_OPERAND_RE = re.compile(r"dot\(\s*%?([\w\.\-]+)")
 def _dot_flops(line: str, symbols: dict) -> float:
     """2 * prod(output dims) * prod(lhs contracting dim sizes).
 
-    Operand shapes are not printed inline in post-optimization HLO text, so
-    the lhs shape is resolved through the per-computation symbol table."""
+    Depending on backend/pass, operand shapes are either printed inline
+    (``dot(f32[512,256]{1,0} %a, ...)`` — CPU scheduled HLO) or only as
+    operand names resolved through the per-computation symbol table."""
     m = re.search(r"=\s*([a-z][a-z0-9]*\[[0-9,]*\])", line)
     if not m:
         return 0.0
     out_elems, _ = _shape_elems_bytes(m.group(1))
-    om = _DOT_OPERAND_RE.search(line)
     cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
     dims = None
-    if om is not None:
-        shp = symbols.get(om.group(1))
-        if shp:
-            sm = _SHAPE_RE.search(shp)
-            if sm:
-                dims = [int(x) for x in sm.group(2).split(",") if x]
+    im = re.search(r"dot\(\s*([a-z][a-z0-9]*\[[0-9,]*\])", line)
+    if im is not None:                       # inline lhs shape
+        sm = _SHAPE_RE.search(im.group(1))
+        if sm:
+            dims = [int(x) for x in sm.group(2).split(",") if x]
+    if dims is None:
+        om = _DOT_OPERAND_RE.search(line)
+        if om is not None:
+            shp = symbols.get(om.group(1))
+            if shp:
+                sm = _SHAPE_RE.search(shp)
+                if sm:
+                    dims = [int(x) for x in sm.group(2).split(",") if x]
     if dims is None or cm is None:
         return 2.0 * out_elems
     contracting = 1

@@ -1,0 +1,64 @@
+"""GPipe-style pipeline parallelism over a mesh axis.
+
+Each device owns one stage's parameters (leading dim of every param leaf =
+n_stages, sharded over ``stage_axis``). Microbatches march through the
+stage ring: at clock tick t, stage s computes microbatch t-s and hands the
+activation to stage s+1 with a ``ppermute`` — the per-tick shift is the
+pipeline's device-wide barrier, exactly the role ``grid.sync()`` plays
+inside a single persistent kernel (DESIGN.md §3).
+
+The fill/drain ticks where a stage has no valid microbatch compute on
+zeros and their results are discarded; that waste is the pipeline bubble,
+``bubble_fraction`` below (= (S-1)/(M+S-1), paper-standard GPipe figure).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.dist.mesh import mesh_axis_size
+from repro.dist.sharding import smap
+
+
+def bubble_fraction(n_micro: int, n_stages: int) -> float:
+    """Fraction of stage-ticks idle during fill+drain."""
+    return (n_stages - 1) / (n_micro + n_stages - 1)
+
+
+def pipeline_apply(stage_fn: Callable[[Any, jax.Array], jax.Array],
+                   params, xs, *, mesh: Mesh, stage_axis: str = "stage"):
+    """Run ``xs`` (n_micro, mb, ...) through ``n_stages`` chained stages.
+
+    ``stage_fn(stage_params, h) -> h`` is one stage; ``params`` is a pytree
+    whose leaves all have leading dim n_stages. Equivalent to applying the
+    stages sequentially to every microbatch; returns (n_micro, mb, ...).
+    """
+    n_stages = mesh_axis_size(mesh, stage_axis)
+    n_micro = xs.shape[0]
+    last = n_stages - 1
+    shift = [(i, i + 1) for i in range(n_stages - 1)]
+
+    def local(params_l, xs):
+        p = jax.tree.map(lambda a: a[0], params_l)   # this stage's slice
+        idx = jax.lax.axis_index(stage_axis)
+        recv = jnp.zeros(xs.shape[1:], xs.dtype)
+        out = jnp.zeros_like(xs)
+        for t in range(n_micro + n_stages - 1):
+            x_in = jnp.where(idx == 0, xs[min(t, n_micro - 1)], recv)
+            y = stage_fn(p, x_in)
+            mb = t - last                      # microbatch leaving the pipe
+            if 0 <= mb < n_micro:
+                out = out.at[mb].set(jnp.where(idx == last, y, out[mb]))
+            if n_stages > 1:
+                recv = jax.lax.ppermute(y, stage_axis, shift)
+        # only the last stage holds results; psum replicates them (all
+        # other shards contribute zeros)
+        return jax.lax.psum(out, stage_axis)
+
+    param_specs = jax.tree.map(
+        lambda a: P(stage_axis, *([None] * (a.ndim - 1))), params)
+    return smap(local, mesh=mesh, in_specs=(param_specs, P()),
+                out_specs=P())(params, xs)

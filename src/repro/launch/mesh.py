@@ -6,7 +6,7 @@ XLA_FLAGS before this is called).
 """
 from __future__ import annotations
 
-import jax
+from repro.dist.mesh import discover_mesh, make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -16,15 +16,9 @@ def make_production_mesh(*, multi_pod: bool = False):
     axis; see dist/pipeline.py)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_local_mesh(model_axis: int = 1):
     """Mesh over whatever devices exist locally (tests / examples)."""
-    n = len(jax.devices())
-    assert n % model_axis == 0
-    return jax.make_mesh(
-        (n // model_axis, model_axis), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return discover_mesh(model_axis=model_axis)

@@ -26,7 +26,7 @@ from repro.core import perks
 from repro.dist.sharding import smap
 from repro.core.cache_policy import plan_caching, stencil_arrays
 from repro.core.hardware import Chip, TPU_V5E
-from repro.dist.collectives import halo_exchange
+from repro.dist.collectives import axis_size, halo_exchange
 from repro.kernels.common import StencilSpec, get_spec
 from repro.kernels import ref as kref
 from repro.kernels import ops as kops
@@ -87,7 +87,7 @@ def make_distributed_step(spec: StencilSpec, mesh: Mesh, axis: str = "data"):
         upd = spec.apply_rows(xp, r, xp.shape[0] - r)
         # global Dirichlet border: freeze first/last `r` rows of the
         # *global* domain (shards at the ends)
-        n = jax.lax.axis_size(axis)
+        n = axis_size(axis)
         idx = jax.lax.axis_index(axis)
         out = upd
         row = jnp.arange(x_l.shape[0])

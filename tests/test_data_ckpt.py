@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # optional-dep shim (tests/_hyp.py)
 
 from repro.ckpt import checkpoint as ckpt
 from repro.data.pipeline import DataConfig, Prefetcher, synth_batch
@@ -95,8 +95,8 @@ def test_elastic_restore_new_sharding(tmp_path):
     from jax.sharding import NamedSharding, PartitionSpec as P
     t = {"w": jnp.arange(16.0).reshape(4, 4)}
     ckpt.save(tmp_path, 1, t)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.dist.mesh import make_mesh
+    mesh = make_mesh((1,), ("data",))
     sh = {"w": NamedSharding(mesh, P("data", None))}
     got, _ = ckpt.restore(ckpt.find_latest(tmp_path), t, shardings=sh)
     np.testing.assert_array_equal(got["w"], t["w"])

@@ -1,37 +1,19 @@
 """Distributed tests — spawn subprocesses with fake multi-device CPU so the
 main test process keeps seeing exactly one device (assignment requirement).
+The runner lives in conftest.py (``dist_run`` fixture); mesh construction
+goes through ``repro.dist.mesh.make_mesh`` (Auto axis types on every JAX
+version).
 """
-import json
-import os
-import subprocess
-import sys
-import textwrap
-from pathlib import Path
-
-import pytest
-
-REPO = Path(__file__).resolve().parent.parent
 
 
-def _run(code: str, n_dev: int = 8, timeout=360) -> dict:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
-    env["PYTHONPATH"] = str(REPO / "src")
-    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                         capture_output=True, text=True, env=env,
-                         timeout=timeout)
-    assert out.returncode == 0, out.stderr[-3000:]
-    return json.loads(out.stdout.strip().splitlines()[-1])
-
-
-def test_distributed_stencil_matches_single():
-    res = _run("""
+def test_distributed_stencil_matches_single(dist_run):
+    res = dist_run("""
         import json, jax, jax.numpy as jnp, numpy as np
         from repro.kernels.common import get_spec
         from repro.kernels import ref
         from repro.solvers import stencil
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.dist.mesh import make_mesh
+        mesh = make_mesh((8,), ("data",))
         spec = get_spec("2ds9pt")
         x = jax.random.normal(jax.random.key(0), (64, 128), jnp.float32)
         got = stencil.run_distributed(x, spec, 7, mesh)
@@ -41,13 +23,13 @@ def test_distributed_stencil_matches_single():
     assert res["err"] < 1e-5
 
 
-def test_distributed_cg_matches_single():
-    res = _run("""
+def test_distributed_cg_matches_single(dist_run):
+    res = dist_run("""
         import json, jax, jax.numpy as jnp
         from repro.solvers import cg
         from repro.kernels import ref
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.dist.mesh import make_mesh
+        mesh = make_mesh((8,), ("data",))
         data, cols = cg.load_dataset("poisson_64")
         b = jax.random.normal(jax.random.key(1), (data.shape[0],), jnp.float32)
         x_d, rr_d = cg.run_distributed(data, cols, b, 15, mesh)
@@ -59,13 +41,13 @@ def test_distributed_cg_matches_single():
     assert res["err"] < 1e-3 and res["rr_rel"] < 1e-3
 
 
-def test_sharded_flash_decode_matches_ref():
-    res = _run("""
+def test_sharded_flash_decode_matches_ref(dist_run):
+    res = dist_run("""
         import json, jax, jax.numpy as jnp
         from repro.dist.collectives import sharded_decode_attention
+        from repro.dist.mesh import make_mesh
         from repro.kernels import ref
-        mesh = jax.make_mesh((8,), ("model",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ("model",))
         B, Hq, Hkv, S, D = 2, 8, 2, 256, 32
         ks = jax.random.split(jax.random.key(0), 3)
         q = jax.random.normal(ks[0], (B, Hq, D), jnp.float32)
@@ -81,12 +63,12 @@ def test_sharded_flash_decode_matches_ref():
     assert res["err"] < 1e-4
 
 
-def test_pipeline_parallel_matches_sequential():
-    res = _run("""
+def test_pipeline_parallel_matches_sequential(dist_run):
+    res = dist_run("""
         import json, jax, jax.numpy as jnp, numpy as np
         from repro.dist.pipeline import pipeline_apply, bubble_fraction
-        mesh = jax.make_mesh((4,), ("stage",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.dist.mesh import make_mesh
+        mesh = make_mesh((4,), ("stage",))
         n_stages, n_micro, mb, d = 4, 8, 2, 16
         key = jax.random.key(0)
         w = jax.random.normal(key, (n_stages, d, d)) / jnp.sqrt(d)
@@ -106,12 +88,13 @@ def test_pipeline_parallel_matches_sequential():
     assert abs(res["bubble"] - 3 / 11) < 1e-9
 
 
-def test_moe_ep_matches_single_device():
+def test_moe_ep_matches_single_device(dist_run):
     """Expert-parallel shard_map MoE == single-device routing."""
-    res = _run("""
+    res = dist_run("""
         import json, jax, jax.numpy as jnp
         from repro.configs.registry import get_smoke_config
         from repro.dist import sharding as shd
+        from repro.dist.mesh import make_mesh
         from repro.models import moe as moe_lib
         from repro.models.lm import Model
         cfg = get_smoke_config("qwen3-moe-235b-a22b")
@@ -121,8 +104,7 @@ def test_moe_ep_matches_single_device():
         x = jax.random.normal(jax.random.key(2), (2, 16, cfg.d_model),
                               jnp.bfloat16)
         y_single, aux_single = moe_lib.moe_apply(lp["mlp"], cfg, x)
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((2, 4), ("data", "model"))
         rules = shd.make_rules(mesh)
         with mesh, shd.use_rules(rules):
             y_ep, aux_ep = jax.jit(
@@ -143,15 +125,15 @@ def test_moe_ep_matches_single_device():
     assert res["aux_rel"] < 0.25, res
 
 
-def test_elastic_checkpoint_across_mesh_sizes(tmp_path):
+def test_elastic_checkpoint_across_mesh_sizes(tmp_path, dist_run):
     """Save on 8 devices, restore on 4 — logical checkpoint reshards."""
     code = f"""
         import json, jax, jax.numpy as jnp, numpy as np
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.ckpt import checkpoint as ckpt
+        from repro.dist.mesh import make_mesh
         n = len(jax.devices())
-        mesh = jax.make_mesh((n,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((n,), ("data",))
         w = jax.device_put(jnp.arange(64.0).reshape(8, 8),
                            NamedSharding(mesh, P("data", None)))
         tree = {{"w": w}}
@@ -168,6 +150,6 @@ def test_elastic_checkpoint_across_mesh_sizes(tmp_path):
             print(json.dumps({{"ok": ok,
                                "nshards": len(got["w"].sharding.device_set)}}))
     """
-    assert _run(code, n_dev=8)["saved"]
-    res = _run(code, n_dev=4)
+    assert dist_run(code, n_dev=8)["saved"]
+    res = dist_run(code, n_dev=4)
     assert res["ok"] and res["nshards"] == 4

@@ -1,0 +1,130 @@
+"""Unit tests for the repro.dist layer itself.
+
+Two groups:
+
+  * Rule-engine tests that are mesh-shape-only — they run on any device
+    count (a 1x1 mesh exercises the table/conflict logic).
+  * Collective tests (halo_exchange ring vs. non-periodic, smap axis
+    plumbing, constrain) that need real shards. These run in-process on a
+    forced 8-device CPU — CI runs the suite under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` — and skip on a
+    single-device box (where tests/test_dist.py covers the same paths via
+    subprocesses).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import sharding as shd
+from repro.dist.collectives import halo_exchange
+from repro.dist.mesh import make_mesh, mesh_axis_size
+
+multi_device = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs 8 devices (XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+
+# -- rule engine (any device count) ---------------------------------------------
+
+def test_mesh_axis_size_absent_axis_is_one():
+    mesh = make_mesh((1,), ("data",))
+    assert mesh_axis_size(mesh, "data") == 1
+    assert mesh_axis_size(mesh, "model") == 1
+
+
+def test_spec_for_basic_table():
+    mesh = make_mesh((1, 1), ("data", "model"))
+    rules = shd.make_rules(mesh)
+    assert rules.spec_for((64, 256), ("embed", "ffn")) == P("data", "model")
+    assert rules.spec_for((8, 128), ("batch", None), is_param=False) \
+        == P("data")
+    # "layers" (scan dim) and unknown axes stay replicated
+    assert rules.spec_for((4, 64, 64), ("layers", "embed", None)) \
+        == P(None, "data")
+
+
+def test_spec_for_expert_parallel_conflict():
+    """("expert", "embed", "ffn"): expert takes the model axis; ffn wants
+    it too, loses, replicates — and the conflict is recorded."""
+    mesh = make_mesh((1, 1), ("data", "model"))
+    rules = shd.make_rules(mesh)
+    spec = rules.spec_for((4, 64, 96), ("expert", "embed", "ffn"),
+                          name="moe.gate")
+    assert spec == P("model", "data")
+    assert ("moe.gate", "ffn", 2, "axis-taken") in rules.fallbacks
+
+
+def test_make_rules_flags():
+    mesh = make_mesh((1, 1), ("data", "model"))
+    norules = shd.make_rules(mesh, fsdp=False, seq_shard=False)
+    assert norules.spec_for((64, 256), ("embed", "ffn")) == P(None, "model")
+    assert norules.spec_for((2, 128, 64), ("batch", "seq", None),
+                            is_param=False) == P("data")
+
+
+def test_constrain_is_identity_without_rules():
+    x = jnp.ones((4, 4))
+    assert shd.active_rules() is None
+    assert shd.constrain(x, ("batch", None)) is x
+
+
+# -- collectives on real shards (forced 8-device CPU) ---------------------------
+
+@multi_device
+def test_spec_for_indivisible_falls_back():
+    mesh = make_mesh((4, 2), ("data", "model"))
+    rules = shd.make_rules(mesh)
+    # 6 % 4 != 0 -> the batch dim must replicate, recorded as a fallback
+    assert rules.spec_for((6, 64), ("batch", None), is_param=False,
+                          name="batch6") == P()
+    assert ("batch6", "batch", 0, "indivisible") in rules.fallbacks
+    # 64 % 4 == 0 -> sharded fine
+    assert rules.spec_for((64, 64), ("batch", None), is_param=False) \
+        == P("data")
+
+
+@multi_device
+def test_smap_axis_plumbing():
+    mesh = make_mesh((8,), ("data",))
+    got = shd.smap(lambda x: jax.lax.psum(x, "data"), mesh=mesh,
+                   in_specs=(P("data"),), out_specs=P())(jnp.arange(8.0))
+    np.testing.assert_array_equal(np.asarray(got), 28.0)
+    idx = shd.smap(
+        lambda x: x + jax.lax.axis_index("data").astype(x.dtype),
+        mesh=mesh, in_specs=(P("data"),), out_specs=P("data"))(jnp.zeros(8))
+    np.testing.assert_array_equal(np.asarray(idx), np.arange(8.0))
+
+
+def _halo_rows(periodic: bool):
+    """Concatenate (top, shard, bot) per shard; 16 rows over 8 shards."""
+    mesh = make_mesh((8,), ("data",))
+    x = jnp.broadcast_to(jnp.arange(16.0)[:, None], (16, 4))
+
+    def collect(x_l):
+        top, bot = halo_exchange(x_l, 1, "data", periodic=periodic)
+        return jnp.concatenate([top, x_l, bot], axis=0)
+
+    out = shd.smap(collect, mesh=mesh, in_specs=(P("data", None),),
+                   out_specs=P("data", None))(x)
+    return np.asarray(out).reshape(8, 4, 4)[:, :, 0]  # (shard, [t,r0,r1,b])
+
+
+@multi_device
+def test_halo_exchange_nonperiodic_edges_zero():
+    rows = _halo_rows(periodic=False)
+    for i in range(8):
+        lo = 2 * i
+        top = rows[i - 1][2] if i > 0 else 0.0       # neighbour's last row
+        bot = rows[i + 1][1] if i < 7 else 0.0       # neighbour's first row
+        np.testing.assert_array_equal(rows[i], [top, lo, lo + 1, bot])
+
+
+@multi_device
+def test_halo_exchange_ring_wraps():
+    rows = _halo_rows(periodic=True)
+    for i in range(8):
+        lo = 2 * i
+        np.testing.assert_array_equal(
+            rows[i], [(lo - 1) % 16, lo, lo + 1, (lo + 2) % 16])

@@ -1,0 +1,60 @@
+"""Execution-tier equivalence across the whole stencil zoo.
+
+``core/perks.py`` promises that HOST_LOOP, DEVICE_LOOP and RESIDENT
+compute bit-identical results (DESIGN.md §2). This asserts it for every
+``StencilSpec`` in ``kernels/common.py``:
+
+  * host loop == device loop == chunked loop: exactly equal (same step
+    function, only the dispatch structure differs);
+  * RESIDENT (fully VMEM-resident kernel): exactly equal — the kernel body
+    applies the identical ``spec.apply`` graph;
+  * RESIDENT with partial caching (the streamed PERKS kernel): equal to
+    <= 1 ulp. XLA is free to contract mul+add into FMA differently for the
+    subtiled slices, so bit-equality is not guaranteed there by any
+    backend; the tolerance below is two ulps of the O(1) cell values.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import perks
+from repro.kernels import ref
+from repro.kernels.common import BENCHMARKS, get_spec
+from repro.solvers import stencil
+
+STEPS = 4
+
+
+def _domain(spec):
+    shape = (48, 64) if spec.ndim == 2 else (24, 16, 32)
+    return jax.random.normal(jax.random.key(0), shape, jnp.float32)
+
+
+@pytest.mark.parametrize("name", sorted(BENCHMARKS))
+def test_tiers_bit_identical(name):
+    spec = get_spec(name)
+    x = _domain(spec)
+    host = stencil.run_host_loop(x, spec, STEPS)
+    device = stencil.run_device_loop(x, spec, STEPS)
+    resident = stencil.run_resident(x, spec, STEPS,
+                                    cached_rows=x.shape[0])
+    step = functools.partial(ref.stencil_step, spec=spec)
+    chunked = perks.chunked_loop(step, STEPS, sync_every=2)(x)
+    np.testing.assert_array_equal(np.asarray(host), np.asarray(device))
+    np.testing.assert_array_equal(np.asarray(host), np.asarray(chunked))
+    np.testing.assert_array_equal(np.asarray(host), np.asarray(resident))
+
+
+@pytest.mark.parametrize("name", sorted(BENCHMARKS))
+def test_partial_caching_within_ulp(name):
+    spec = get_spec(name)
+    x = _domain(spec)
+    device = stencil.run_device_loop(x, spec, STEPS)
+    perks_partial = stencil.run_resident(x, spec, STEPS,
+                                         cached_rows=x.shape[0] // 2,
+                                         sub_rows=8)
+    np.testing.assert_allclose(np.asarray(perks_partial), np.asarray(device),
+                               rtol=0, atol=2.5e-7)

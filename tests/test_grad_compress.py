@@ -2,7 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # optional-dep shim (tests/_hyp.py)
 
 from repro.optim import grad_compress as gc
 

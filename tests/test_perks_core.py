@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # optional-dep shim (tests/_hyp.py)
 
 from repro.core import perks
 from repro.core.cache_policy import (CacheableArray, plan_caching,

@@ -88,19 +88,14 @@ def test_hlo_costs_scan_trip_counts():
     assert hc.flops_scale > 10  # raw count misses the trip count
 
 
-def test_hlo_costs_collectives(tmp_path):
+def test_hlo_costs_collectives(dist_run):
     """Collectives inside scan bodies are multiplied by trip count."""
-    import subprocess, sys, os, textwrap, json
-    from pathlib import Path
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
-    env["PYTHONPATH"] = str(Path(__file__).resolve().parent.parent / "src")
-    code = textwrap.dedent("""
+    res = dist_run("""
         import json, jax, jax.numpy as jnp
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.core import hlo_costs
-        mesh = jax.make_mesh((4,), ("d",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.dist.mesh import make_mesh
+        mesh = make_mesh((4,), ("d",))
         sh = NamedSharding(mesh, P("d", None))
         def step(c, _):
             s = c.sum()                      # all-reduce per step
@@ -111,12 +106,8 @@ def test_hlo_costs_collectives(tmp_path):
                                             sharding=sh)).compile()
         hc = hlo_costs.analyze(comp.as_text())
         print(json.dumps({"ar": hc.coll_count.get("all-reduce", 0)}))
-    """)
-    out = subprocess.run([sys.executable, "-c", code], env=env,
-                         capture_output=True, text=True, timeout=240)
-    assert out.returncode == 0, out.stderr[-2000:]
-    ar = json.loads(out.stdout.strip().splitlines()[-1])["ar"]
-    assert ar >= 10  # one per scan step, trip-multiplied
+    """, n_dev=4, timeout=240)
+    assert res["ar"] >= 10  # one per scan step, trip-multiplied
 
 
 # -- serving engine --------------------------------------------------------------
