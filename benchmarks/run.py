@@ -4,6 +4,8 @@ Prints ``name,us_per_call,derived`` CSV rows:
 
   stencil_large_*   Fig. 5  (large-domain stencils, host vs PERKS)
   stencil_small_*   Fig. 6  (small domains — fully VMEM-resident regime)
+  stencil_fuse_*    beyond-paper: temporal blocking sweep (fuse_steps in
+                    {1,2,4}; DESIGN.md §4, arXiv:2306.03336)
   cg_*              Fig. 7  (CG suite, host vs PERKS + policy planner)
   where_cache_*     Fig. 8  (where/how much to cache sweep)
   what_cache_*      Fig. 9  (what to cache: CG policy matrix)
@@ -13,12 +15,17 @@ Prints ``name,us_per_call,derived`` CSV rows:
   roofline_*        §Roofline cells from the dry-run artifacts (if present)
 
 Use REPRO_BENCH_FULL=1 for the full sweep (default trims to keep the run
-a few minutes on one CPU core).
+a few minutes on one CPU core). The CSV schema and the full bench-section
+<-> paper-figure mapping are documented in docs/BENCHMARKS.md.
 """
 from __future__ import annotations
 
 import os
 import sys
+
+# Runnable both as `python benchmarks/run.py` and `python -m benchmarks.run`:
+# the former puts benchmarks/ (not the repo root) on sys.path.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 
 def main() -> None:
@@ -30,6 +37,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     gm_large = stencil_bench.run("large", quick=quick)
     gm_small = stencil_bench.run("small", quick=quick)
+    stencil_bench.run_fused(quick=quick)
     gm_cg = cg_bench.run(quick=quick)
     policy_bench.run_where()
     policy_bench.run_what()

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.util import time_fn, row
+from repro.core.cache_policy import gm_bytes_fused
 from repro.core.hardware import TPU_V5E
 from repro.core.perf_model import project_host_loop, project_perks
 from repro.kernels.common import BENCHMARKS
@@ -41,6 +42,36 @@ def projected(spec, domain, steps=1000):
                           dtype_bytes=4, cached_cells=cached,
                           halo_bytes_per_step=halo if cached < cells else 0)
     return cached / cells, base.t_total / perks.t_total, perks
+
+
+def run_fused(quick: bool = False):
+    """Temporal-blocking sweep (DESIGN.md §4, arXiv:2306.03336): the
+    streamed PERKS kernel at fuse_steps in {1, 2, 4}. Measured wall clock
+    is CPU interpret-mode (relative trend only); the derived column
+    carries the structural win — HBM passes and projected traffic from
+    the generalized Eq. 5 (``cache_policy.gm_bytes_fused``)."""
+    names = ["2d5pt", "3d7pt"] if quick else ["2d5pt", "2ds9pt", "2d9pt",
+                                              "3d7pt", "poisson"]
+    steps = 8
+    for name in names:
+        spec = BENCHMARKS[name]
+        shape = (48, 64) if spec.ndim == 2 else (24, 8, 16)
+        x = jax.random.normal(jax.random.key(0), shape, jnp.float32)
+        cached = shape[0] // 2
+        row_bytes = int(np.prod(shape[1:])) * 4
+        dom_bytes = int(np.prod(shape)) * 4
+        base_us = None
+        for t in (1, 2, 4):
+            tf, _ = time_fn(lambda: ssol.run_resident(
+                x, spec, steps, cached_rows=cached, sub_rows=32,
+                fuse_steps=t), warmup=1, iters=3)
+            base_us = base_us or tf
+            gm = gm_bytes_fused(steps, dom_bytes, cached * row_bytes,
+                                row_bytes=row_bytes, radius=spec.radius,
+                                fuse_steps=t)
+            row(f"stencil_fuse_{name}_t{t}", tf / steps * 1e6,
+                f"hbm_passes={-(-steps // t)};gm_bytes={gm:.0f};"
+                f"interp_speedup={base_us / tf:.2f}x")
 
 
 def run(domain_kind: str = "large", quick: bool = False):

@@ -136,6 +136,92 @@ def stencil_arrays(
     ]
 
 
+def stencil_shard_arrays(
+    shard_rows: int,
+    row_bytes: int,
+    radius: int,
+    *,
+    fuse_steps: int = 1,
+) -> list[CacheableArray]:
+    """Cacheable regions of a row-partitioned shard under temporal blocking.
+
+    With ``fuse_steps`` = t steps fused per halo exchange (DESIGN.md §4),
+    the ring neighbours read — and the halo they send back — widens from
+    ``radius`` to ``radius * t`` rows per side. The boundary region (stores
+    must still reach main memory) and the never-cached halo grow with t,
+    shrinking the fully-elidable interior: the t-dependent wider uncached
+    ring of the generalized Eq. 5.
+    """
+    ring = min(shard_rows, 2 * radius * fuse_steps)   # both sides
+    interior = shard_rows - ring
+    return stencil_arrays(interior * row_bytes, ring * row_bytes,
+                          2 * radius * fuse_steps * row_bytes)
+
+
+@dataclasses.dataclass(frozen=True)
+class TemporalBlockPlan:
+    """Cost/benefit of fusing ``fuse_steps`` time steps per barrier
+    (paper Eq. 5 generalized to t; arXiv:2306.03336)."""
+
+    fuse_steps: int
+    barriers: int                  # halo exchanges / HBM passes for n_steps
+    halo_rows_per_exchange: int    # 2*r*t rows moved per exchange (vs 2*r)
+    redundant_row_updates: int     # extra row-updates over the whole run
+    gm_bytes: float                # generalized Eq. 5 main-memory traffic
+
+
+def gm_bytes_fused(
+    n_steps: int,
+    domain_bytes: int,
+    cached_bytes: int,
+    *,
+    row_bytes: int,
+    radius: int,
+    fuse_steps: int,
+) -> float:
+    """Eq. 5 generalized to temporal blocking.
+
+    The uncached region round-trips main memory once per *pass* of t fused
+    steps instead of once per step, at the price of a 2*r*t-row window
+    overlap re-read per pass:
+
+        A_gm = ceil(N/t) * (2*D_uncached + 2*r*t*row_bytes) + 2*D_cached
+
+    ``fuse_steps=1`` recovers Eq. 5 plus the per-step halo re-read the
+    paper accounts separately in Eq. 9. Note the overlap term is constant
+    per *step* (2*r*row_bytes amortized), so deeper fusion is pure win on
+    traffic until the wider working set eats the VMEM cache budget.
+    """
+    t = fuse_steps
+    passes = -(-n_steps // t)
+    uncached = max(0, domain_bytes - cached_bytes)
+    overlap = 2 * radius * t * row_bytes if uncached else 0
+    return passes * (2.0 * uncached + overlap) + 2.0 * cached_bytes
+
+
+def plan_fuse_steps(
+    n_steps: int,
+    shard_rows: int,
+    row_bytes: int,
+    radius: int,
+    *,
+    cached_bytes: int = 0,
+    max_fuse: int = 8,
+) -> TemporalBlockPlan:
+    """Pick the deepest feasible temporal blocking for a row-partitioned
+    stencil: the largest t <= max_fuse whose r*t-wide halo still fits in
+    the shard (``halo_exchange`` needs ``r*t <= shard_rows``), reported
+    with its barrier count, redundant compute, and generalized-Eq.-5
+    traffic. Redundant compute per pass is sum_{k=1}^{t-1} 2*r*k row
+    updates (the shrinking wide halo)."""
+    t = max(1, min(max_fuse, shard_rows // max(1, radius), n_steps))
+    barriers = -(-n_steps // t)
+    redundant = barriers * radius * t * (t - 1)       # = sum 2*r*k over a pass
+    gm = gm_bytes_fused(n_steps, shard_rows * row_bytes, cached_bytes,
+                        row_bytes=row_bytes, radius=radius, fuse_steps=t)
+    return TemporalBlockPlan(t, barriers, 2 * radius * t, redundant, gm)
+
+
 def cg_arrays(n_rows: int, nnz: int, dtype_bytes: int, index_bytes: int = 4) -> list[CacheableArray]:
     """Cacheable arrays of the PERKS conjugate-gradient solver (§III-B2).
 

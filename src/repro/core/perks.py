@@ -60,6 +60,14 @@ class PerksConfig:
       sync_every: fuse this many time steps per device dispatch, returning to
         the host in between (PERKS with periodic host sync — used for e.g.
         convergence checks in CG; ``None`` fuses all steps).
+      fuse_steps: temporal blocking (DESIGN.md §4): advance this many time
+        steps per *barrier*. What the barrier is depends on the tier — a
+        host dispatch for HOST_LOOP, a halo exchange for the distributed
+        stencil (``solvers/stencil.py``), an HBM streaming pass for the
+        RESIDENT kernels (``kernels/stencil2d.py``). The consumer pays for
+        the fusion with a ``radius * fuse_steps`` wide halo that is
+        redundantly recomputed (arXiv:2306.03336's deep temporal blocking);
+        barrier count drops from N to ceil(N / fuse_steps).
       donate: donate the state buffers to each dispatch. Donation is what
         lets XLA update the domain in place instead of allocating a fresh
         output each step — the DEVICE_LOOP analogue of "the kernel never
@@ -68,7 +76,14 @@ class PerksConfig:
 
     execution: Execution = Execution.DEVICE_LOOP
     sync_every: Optional[int] = None
+    fuse_steps: int = 1
     donate: bool = True
+
+    def __post_init__(self):
+        if self.fuse_steps < 1:
+            raise ValueError(f"fuse_steps must be >= 1, got {self.fuse_steps}")
+        if self.sync_every is not None and self.sync_every < 1:
+            raise ValueError(f"sync_every must be >= 1, got {self.sync_every}")
 
 
 StepFn = Callable[[Any], Any]  # state -> state
@@ -103,6 +118,16 @@ def host_loop(step_fn: StepFn, n_steps: int, *, donate: bool = True) -> Callable
     return run
 
 
+def _fused_runner(step_fn: StepFn, n_steps: int, donate: bool):
+    """Jitted ``step_fn^n_steps`` via fori_loop; donates its input buffers
+    when asked, with NO defensive copy — callers own protecting theirs."""
+
+    def run_all(state):
+        return jax.lax.fori_loop(0, n_steps, lambda _, s: step_fn(s), state)
+
+    return jax.jit(run_all, donate_argnums=(0,) if donate else ())
+
+
 def device_loop(step_fn: StepFn, n_steps: int, *, donate: bool = True) -> Callable[[Any], Any]:
     """PERKS control-flow transform: the whole time loop in one dispatch.
 
@@ -112,11 +137,7 @@ def device_loop(step_fn: StepFn, n_steps: int, *, donate: bool = True) -> Callab
     whatever collective the step function performs (halo exchange, psum),
     which is exactly the device-wide barrier semantics PERKS relies on.
     """
-
-    def run_all(state):
-        return jax.lax.fori_loop(0, n_steps, lambda _, s: step_fn(s), state)
-
-    jitted = jax.jit(run_all, donate_argnums=(0,) if donate else ())
+    jitted = _fused_runner(step_fn, n_steps, donate)
     return (lambda state: jitted(_own(state))) if donate else jitted
 
 
@@ -134,16 +155,26 @@ def chunked_loop(
     between dispatches (e.g. a CG convergence check); returning True stops
     early. This matches how a production PERKS solver is actually run: the
     persistent kernel owns the inner loop, the host owns termination.
+
+    ``n_steps`` need not divide by ``sync_every``: the final dispatch fuses
+    only the remaining steps, so the total is exactly ``n_steps`` (and the
+    dispatch count is ceil(n_steps / sync_every)).
     """
-    inner = device_loop(step_fn, sync_every, donate=donate)
+    # The loop below already owns `state` (one defensive copy at entry), so
+    # the inner runners donate WITHOUT re-copying per dispatch — each chunk
+    # updates the same buffers in place, as the persistent scheme intends.
+    inner = _fused_runner(step_fn, sync_every, donate)
+    rem = n_steps % sync_every
+    inner_rem = _fused_runner(step_fn, rem, donate) if rem else None
 
     def run(state):
         if donate:
             state = _own(state)
         done = 0
         while done < n_steps:
-            state = inner(state)
-            done += sync_every
+            chunk = min(sync_every, n_steps - done)
+            state = (inner if chunk == sync_every else inner_rem)(state)
+            done += chunk
             if on_sync is not None and on_sync(state, done):
                 break
         return state
@@ -163,8 +194,20 @@ def persistent(
     selected by passing a step function that already wraps a resident Pallas
     kernel (see ``repro.kernels.ops``); at this level it behaves like
     DEVICE_LOOP with ``sync_every`` = kernel's fused step count.
+
+    ``config.fuse_steps`` > 1 under HOST_LOOP fuses that many steps per
+    dispatch (the dispatch *is* the barrier there), cutting barrier count to
+    ceil(n_steps / fuse_steps). DEVICE_LOOP is already fully fused, so the
+    knob is a no-op at this level — the distributed/RESIDENT consumers
+    (``solvers/stencil.py``, ``kernels/stencil2d.py``) implement it as
+    wide-halo exchange / multi-step HBM passes instead.
     """
     if config.execution == Execution.HOST_LOOP:
+        if config.fuse_steps > 1:
+            return chunked_loop(
+                step_fn, n_steps, sync_every=config.fuse_steps,
+                donate=config.donate, on_sync=on_sync,
+            )
         return host_loop(step_fn, n_steps, donate=config.donate)
     if config.sync_every is not None and config.sync_every < n_steps:
         return chunked_loop(

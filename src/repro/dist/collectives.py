@@ -67,7 +67,17 @@ def halo_exchange(x, radius: int, axis: str, *, periodic: bool = False):
     (``ppermute`` semantics) — correct for the Dirichlet borders used
     throughout this repo, where the global edge rows are frozen anyway.
     ``periodic=True`` wraps the ring.
+
+    Temporal blocking (DESIGN.md §4) calls this with ``radius = r*t`` —
+    one wide exchange standing in for t narrow ones. The halo still only
+    comes from the *adjacent* neighbour, so the width is capped by the
+    shard: ``radius <= x.shape[0]`` (checked; a silent slice-clamp here
+    would corrupt results instead of failing).
     """
+    if radius > x.shape[0]:
+        raise ValueError(
+            f"halo radius {radius} exceeds shard extent {x.shape[0]}; "
+            f"lower fuse_steps or use more rows per shard")
     n = axis_size(axis)
     fwd = [(i, (i + 1) % n) for i in range(n if periodic else n - 1)]
     bwd = [((i + 1) % n, i) for i in range(n if periodic else n - 1)]

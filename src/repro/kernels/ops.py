@@ -28,15 +28,18 @@ def stencil_resident(x, *, spec: StencilSpec, steps: int):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("spec", "steps", "cached_rows", "sub_rows"))
+    jax.jit,
+    static_argnames=("spec", "steps", "cached_rows", "sub_rows",
+                     "fuse_steps"))
 def stencil_perks(x, *, spec: StencilSpec, steps: int, cached_rows: int,
-                  sub_rows: int = 128):
+                  sub_rows: int = 128, fuse_steps: int = 1):
     """Large-domain PERKS stencil (partial VMEM residency, rest streamed).
-    The kernel updates the domain in place through an input/output alias;
-    the wrapper does not donate, so callers keep their buffers (XLA inserts
-    the one defensive copy)."""
+    ``fuse_steps=t`` advances t time steps per HBM streaming pass
+    (temporal blocking). The kernel updates the domain in place through an
+    input/output alias; the wrapper does not donate, so callers keep their
+    buffers (XLA inserts the one defensive copy)."""
     return _s2d.stencil_perks(x, spec, steps=steps, cached_rows=cached_rows,
-                              sub_rows=sub_rows)
+                              sub_rows=sub_rows, fuse_steps=fuse_steps)
 
 
 @functools.partial(jax.jit, static_argnames=("spec", "sub_rows"))

@@ -50,8 +50,8 @@ def _perks_kernel(
     x_ref,         # input ref (aliased to io_ref; unused — all I/O via io_ref)
     io_ref,        # full domain, HBM (ANY), aliased input/output
     dom,           # VMEM scratch: resident rows [0, R)
-    edge,          # VMEM scratch: step-k values of rows [R, R+r)
-    carry,         # VMEM scratch: step-k values of the r rows above the
+    edge,          # VMEM scratch: step-k values of rows [R, R+r*t)
+    carry,         # VMEM scratch: step-k values of the r*t rows above the
                    # current subtile (already overwritten in HBM)
     sub,           # VMEM scratch: streaming read buffer
     wbuf,          # VMEM scratch: streaming write buffer
@@ -61,10 +61,12 @@ def _perks_kernel(
     steps: int,
     cached_rows: int,
     sub_rows: int,
+    fuse_steps: int,
 ):
     H = io_ref.shape[0]
     r = spec.radius
     R = cached_rows
+    t = fuse_steps
     starts = list(range(R, H, sub_rows))
 
     def _copy(src, dst):
@@ -72,74 +74,117 @@ def _perks_kernel(
         cp.start()
         cp.wait()
 
+    def advance(w, lo, hi, ct):
+        """Advance window ``w`` (step-k values of domain rows [lo, hi)) by
+        ``ct`` time steps. Each application consumes ``r`` rows per side,
+        except sides clamped at the domain border, where the global frozen
+        rows ride along as Dirichlet boundary. Returns the final window and
+        its [lo', hi') row range (a superset of the rows the caller wants).
+        All bounds are static Python ints."""
+        for _ in range(ct):
+            new_lo = lo if lo == 0 else lo + r
+            new_hi = hi if hi == H else hi - r
+            a, b = max(new_lo, r), min(new_hi, H - r)
+            parts = []
+            if new_lo < a:                      # frozen global top rows
+                parts.append(w[new_lo - lo:a - lo])
+            if b > a:
+                parts.append(spec.apply_rows(w, a - lo, b - lo))
+            if b < new_hi:                      # frozen global bottom rows
+                parts.append(w[max(b, a) - lo:new_hi - lo])
+            w = parts[0] if len(parts) == 1 else jnp.concatenate(parts, 0)
+            lo, hi = new_lo, new_hi
+        return w, lo, hi
+
     # Prologue: load the resident region into VMEM once.
     if R > 0:
         _copy(io_ref.at[pl.ds(0, R)], dom)
 
-    def time_step(t, _):
-        # (1) Preserve the resident region's bottom halo (rows [R, R+r))
-        #     at step-k values before the streaming pass overwrites them.
-        if 0 < R < H:
-            _copy(io_ref.at[pl.ds(R, r)], edge)
+    def make_pass(ct):
+        """One HBM streaming pass advancing ``ct`` fused time steps (the
+        temporal block, DESIGN.md §4): every uncached row is read+written
+        once per pass instead of once per step; subtile windows widen to a
+        ``r*ct`` halo whose inner steps are redundantly recomputed."""
+        rt = r * ct
+        e = min(rt, H - R) if 0 < R < H else 0
 
-        # (2) Streamed subtiles, top to bottom, updated in place in HBM.
-        for j, start in enumerate(starts):
-            end = min(start + sub_rows, H)
-            u0 = max(start, r)          # first updated row
-            u1 = min(end, H - r)        # one past last updated row
-            if u1 <= u0:
-                continue
-            read_lo, read_hi = u0 - r, u1 + r
-            n_read = read_hi - read_lo
+        def one_pass(_):
+            # (1) Preserve the resident region's bottom halo (rows
+            #     [R, R+rt)) at step-k values before streaming overwrites.
+            if e > 0:
+                _copy(io_ref.at[pl.ds(R, e)], edge.at[pl.ds(0, e)])
 
-            # Rows already overwritten in HBM come from VMEM:
-            #   subtile 0 borders the resident region -> from `dom`;
-            #   later subtiles border the previous subtile -> from `carry`.
-            hbm_lo = max(read_lo, start)
-            n_top = hbm_lo - read_lo
-            if n_top > 0:
-                if j == 0:
-                    sub[pl.ds(0, n_top)] = dom[pl.ds(R - n_top, n_top)]
+            # (2) Streamed subtiles, top to bottom, updated in place in HBM.
+            for j, start in enumerate(starts):
+                end = min(start + sub_rows, H)
+                u0 = max(start, r)          # first updated row
+                u1 = min(end, H - r)        # one past last updated row
+                if u1 <= u0:
+                    continue
+                read_lo = max(u0 - rt, 0)
+                read_hi = min(u1 + rt, H)
+                n_read = read_hi - read_lo
+
+                # Rows already overwritten in HBM come from VMEM:
+                #   subtile 0 borders the resident region -> from `dom`;
+                #   later subtiles border the previous subtile -> `carry`.
+                hbm_lo = max(read_lo, start)
+                n_top = hbm_lo - read_lo
+                if n_top > 0:
+                    if j == 0:
+                        sub[pl.ds(0, n_top)] = dom[pl.ds(R - n_top, n_top)]
+                    else:
+                        sub[pl.ds(0, n_top)] = carry[pl.ds(rt - n_top, n_top)]
+                _copy(io_ref.at[pl.ds(hbm_lo, read_hi - hbm_lo)],
+                      sub.at[pl.ds(n_top, read_hi - hbm_lo)])
+
+                x = sub[pl.ds(0, n_read)]
+                # Save step-k values of this subtile's bottom rt rows for
+                # the next subtile's top halo, before write-back clobbers
+                # them (sub_rows >= rt keeps them within this window).
+                if j + 1 < len(starts):
+                    carry[pl.ds(0, rt)] = x[end - rt - read_lo:end - read_lo]
+
+                w, wlo, _ = advance(x, read_lo, read_hi, ct)
+                wbuf[pl.ds(0, u1 - u0)] = w[u0 - wlo:u1 - wlo]
+                _copy(wbuf.at[pl.ds(0, u1 - u0)],
+                      io_ref.at[pl.ds(u0, u1 - u0)])
+
+            # (3) Resident region update — entirely VMEM, no HBM traffic
+            #     beyond the step-k edge stash; its bottom rt rows are
+            #     recomputed redundantly from the stash.
+            if R > 0:
+                xc = dom[...] if e == 0 else jnp.concatenate(
+                    [dom[...], edge[pl.ds(0, e)]], axis=0)
+                w, wlo, _ = advance(xc, 0, R + e, ct)
+                if R >= H:
+                    dom[...] = w
                 else:
-                    sub[pl.ds(0, n_top)] = carry[pl.ds(r - n_top, n_top)]
-            _copy(io_ref.at[pl.ds(hbm_lo, read_hi - hbm_lo)],
-                  sub.at[pl.ds(n_top, read_hi - hbm_lo)])
+                    dom[pl.ds(0, R)] = w[0:R]
+            return ()
 
-            x = sub[pl.ds(0, n_read)]
-            # Save step-k values of this subtile's bottom r rows for the
-            # next subtile's top halo, before the write-back clobbers them.
-            if j + 1 < len(starts):
-                carry[...] = x[end - r - read_lo:end - read_lo]
+        return one_pass
 
-            upd = spec.apply_rows(x, u0 - read_lo, u1 - read_lo)
-            wbuf[pl.ds(0, u1 - u0)] = upd
-            _copy(wbuf.at[pl.ds(0, u1 - u0)], io_ref.at[pl.ds(u0, u1 - u0)])
-
-        # (3) Resident region update — entirely VMEM, no HBM traffic.
-        if R > 0:
-            u1c = min(R, H - r)
-            if u1c > r:
-                xc = dom[...] if R >= H else jnp.concatenate(
-                    [dom[...], edge[...]], axis=0)
-                dom[pl.ds(r, u1c - r)] = spec.apply_rows(xc, r, u1c)
-        return ()
-
-    jax.lax.fori_loop(0, steps, time_step, ())
+    full, rem = divmod(steps, t)
+    if full:
+        jax.lax.fori_loop(0, full, lambda i, c: make_pass(t)(c), ())
+    if rem:
+        make_pass(rem)(())
 
     # Epilogue: the resident region's final state goes back to HBM once.
     if R > 0:
         _copy(dom, io_ref.at[pl.ds(0, R)])
 
 
-def _scratch_shapes(shape, dtype, spec, cached_rows, sub_rows):
-    r = spec.radius
+def _scratch_shapes(shape, dtype, spec, cached_rows, sub_rows, fuse_steps):
+    rt = spec.radius * fuse_steps
     rest = shape[1:]
     one = lambda n: (max(n, 1),) + rest  # zero-size scratch is not allowed
     return [
         pltpu.VMEM(one(cached_rows), dtype),
-        pltpu.VMEM(one(r), dtype),
-        pltpu.VMEM(one(r), dtype),
-        pltpu.VMEM(one(min(sub_rows, shape[0]) + 2 * r), dtype),
+        pltpu.VMEM(one(rt), dtype),
+        pltpu.VMEM(one(rt), dtype),
+        pltpu.VMEM(one(min(sub_rows, shape[0]) + 2 * rt), dtype),
         pltpu.VMEM(one(min(sub_rows, shape[0])), dtype),
         pltpu.SemaphoreType.DMA,
     ]
@@ -152,6 +197,7 @@ def stencil_perks(
     steps: int,
     cached_rows: int,
     sub_rows: int = 128,
+    fuse_steps: int = 1,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
     """Run ``steps`` time steps of ``spec`` with rows [0, cached_rows)
@@ -160,26 +206,37 @@ def stencil_perks(
     ``cached_rows == x.shape[0]`` gives the fully-resident small-domain
     kernel; ``cached_rows == 0`` streams everything (still persistent:
     one launch for all steps, but no inter-step reuse).
+
+    ``fuse_steps=t`` is temporal blocking (DESIGN.md §4): each HBM
+    streaming pass advances t time steps, so the uncached region round-
+    trips HBM ceil(steps/t) times instead of ``steps`` times. Subtile
+    windows widen to a ``radius*t`` halo of step-k values whose inner
+    steps are recomputed redundantly; ``sub_rows`` must cover that halo.
     """
     H = x.shape[0]
     r = spec.radius
+    t = fuse_steps
+    assert t >= 1, "fuse_steps must be >= 1"
     assert cached_rows in (0, H) or cached_rows >= r, (
         "partial caching needs at least `radius` resident rows")
     assert cached_rows <= H
-    assert sub_rows >= r, "subtile must cover the next subtile's halo"
+    assert sub_rows >= r * min(t, steps), (
+        "subtile must cover the next subtile's fused halo "
+        f"(sub_rows >= radius*fuse_steps = {r * min(t, steps)})")
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
 
     kernel = functools.partial(
         _perks_kernel, spec=spec, steps=steps,
-        cached_rows=cached_rows, sub_rows=sub_rows,
+        cached_rows=cached_rows, sub_rows=sub_rows, fuse_steps=t,
     )
     return pl.pallas_call(
         kernel,
         out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
         in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
         out_specs=pl.BlockSpec(memory_space=pl.ANY),
-        scratch_shapes=_scratch_shapes(x.shape, x.dtype, spec, cached_rows, sub_rows),
+        scratch_shapes=_scratch_shapes(x.shape, x.dtype, spec, cached_rows,
+                                       sub_rows, t),
         input_output_aliases={0: 0},
         interpret=interpret,
     )(x)

@@ -40,6 +40,7 @@ def plan_resident_planes(
     chip: Chip = TPU_V5E,
     sub_rows: int = 8,
     vmem_fraction: float = 0.9,
+    fuse_steps: int = 1,
 ) -> int:
     """How many leading planes (rows in 2D) can stay VMEM-resident.
 
@@ -47,12 +48,18 @@ def plan_resident_planes(
     set is the streaming read/write buffers + halo carries; everything left
     of VMEM holds resident planes. Returns a plane count in [0, shape[0]],
     rounded down to a multiple of 8 (f32 sublane tiling).
+
+    Temporal blocking widens the working set: ``fuse_steps=t`` grows the
+    streaming window and the edge/carry stashes from ``radius`` to
+    ``radius*t`` planes (DESIGN.md §4) — deeper fusion trades resident
+    planes for fewer HBM passes, which is the fuse_steps-vs-VMEM-budget
+    tradeoff the generalized Eq. 5 prices.
     """
     plane_elems = 1
     for d in shape[1:]:
         plane_elems *= d
     plane_bytes = plane_elems * dtype_bytes
-    r = spec.radius
+    r = spec.radius * fuse_steps
     working = (2 * (sub_rows + 2 * r) + 2 * r) * plane_bytes  # sub+wbuf+edge+carry
     budget = chip.onchip_bytes * vmem_fraction - working
     planes = int(budget // plane_bytes)

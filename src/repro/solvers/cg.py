@@ -17,6 +17,11 @@ The policy ranking comes from ``core.cache_policy.cg_arrays`` (r > A).
 Synthetic SPD datasets stand in for SuiteSparse (offline container):
 2D Poisson operators and banded random SPD matrices, sized to straddle the
 on-chip capacity boundary the way Fig. 7 straddles L2.
+
+Temporal blocking for CG (DESIGN.md §4): ``run_distributed`` with
+``fuse_reductions=True`` merges the two dependent reduction barriers per
+iteration into one chunked psum via the pipelined-CG residual recurrence
+(arXiv:1410.4054) — the solver analogue of the stencils' ``fuse_steps``.
 """
 from __future__ import annotations
 
@@ -135,9 +140,28 @@ def plan_policy(n_rows: int, nnz: int, dtype_bytes: int = 4, *,
 # -- distributed CG ---------------------------------------------------------------
 
 def run_distributed(data, cols, b, iters: int, mesh: Mesh, *,
-                    axis: str = "data"):
+                    axis: str = "data", fuse_reductions: bool = False):
     """Row-partitioned CG: local SpMV gathers the global p (all-gather),
-    dot products psum — the collective IS the paper's device barrier."""
+    dot products psum — the collective IS the paper's device barrier.
+
+    ``fuse_reductions=True`` is the CG face of temporal blocking
+    (DESIGN.md §4; "Pipelined Iterative Solvers with Kernel Fusion",
+    arXiv:1410.4054): textbook CG pays TWO dependent reduction barriers
+    per iteration (p·Ap, then r'·r' after the axpys). The fused variant
+    stacks FOUR simultaneous partial dots — p·Ap, r·Ap, Ap·Ap and the
+    *current* r·r — into ONE chunked psum and recovers the new residual
+    norm from the recurrence
+
+        ||r'||² = ||r||² - 2α(r·Ap) + α²(Ap·Ap),   α = ||r||²/(p·Ap)
+
+    — one synchronization per iteration instead of two. Carrying the
+    recurrence alone compounds rounding noise once CG converges (β =
+    noise/noise explodes the search direction — the classic pipelined-CG
+    instability), so each iteration re-grounds on the true r·r that rode
+    along in the same psum: the estimate's error is then one step deep
+    and stays *relative* to the residual scale. Tests bound the drift vs
+    textbook CG.
+    """
     n = b.shape[0]
 
     def step(state):
@@ -146,11 +170,26 @@ def run_distributed(data, cols, b, iters: int, mesh: Mesh, *,
         def local(iter_data, iter_cols, p_full, x_l, r_l, p_l, rr_s):
             from repro.kernels.ref import _safe_div
             ap_l = jnp.sum(iter_data * p_full[iter_cols], axis=1)
-            pap = jax.lax.psum(jnp.vdot(p_l, ap_l), axis)
-            alpha = _safe_div(rr_s, pap)
-            x_l = x_l + alpha * p_l
-            r_l = r_l - alpha * ap_l
-            rr_new = jax.lax.psum(jnp.vdot(r_l, r_l), axis)
+            if fuse_reductions:
+                dots = jax.lax.psum(
+                    jnp.stack([jnp.vdot(p_l, ap_l), jnp.vdot(r_l, ap_l),
+                               jnp.vdot(ap_l, ap_l), jnp.vdot(r_l, r_l)]),
+                    axis)
+                pap, rap, apap, rr_true = dots[0], dots[1], dots[2], dots[3]
+                alpha = _safe_div(rr_true, pap)
+                x_l = x_l + alpha * p_l
+                r_l = r_l - alpha * ap_l
+                rr_new = jnp.maximum(
+                    rr_true - 2.0 * alpha * rap + alpha * alpha * apap, 0.0)
+                beta = _safe_div(rr_new, rr_true)
+                p_l = r_l + beta * p_l
+                return x_l, r_l, p_l, rr_new
+            else:
+                pap = jax.lax.psum(jnp.vdot(p_l, ap_l), axis)
+                alpha = _safe_div(rr_s, pap)
+                x_l = x_l + alpha * p_l
+                r_l = r_l - alpha * ap_l
+                rr_new = jax.lax.psum(jnp.vdot(r_l, r_l), axis)
             beta = _safe_div(rr_new, rr_s)
             p_l = r_l + beta * p_l
             return x_l, r_l, p_l, rr_new
@@ -160,7 +199,7 @@ def run_distributed(data, cols, b, iters: int, mesh: Mesh, *,
             in_specs=(P(axis, None), P(axis, None), P(), P(axis), P(axis),
                       P(axis), P()),
             out_specs=(P(axis), P(axis), P(axis), P()),
-            
+
         )(data, cols, p, x, r, p, rr)
 
     state = (jnp.zeros_like(b), b, b, jnp.vdot(b, b))

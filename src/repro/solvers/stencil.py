@@ -11,11 +11,22 @@ Three single-chip execution tiers (all bit-identical results):
 plus the multi-chip runner: row-partitioned domain inside ``shard_map``,
 per-step halo ``ppermute`` (the device-wide barrier), PERKS device-loop
 over time. Works on any mesh axis.
+
+Temporal blocking (DESIGN.md §4, arXiv:2306.03336): ``fuse_steps=t``
+advances t time steps per barrier. Distributed, that is ONE wide halo
+exchange of ``radius*t`` rows per t steps, with the fused local update
+redundantly recomputing the shrinking halo — ceil(steps/t) exchanges
+instead of ``steps``. Resident, it is t steps per HBM streaming pass
+(see ``kernels/stencil2d.py``). The fused update performs the exact
+per-step arithmetic (identical in exact arithmetic); on real backends
+results agree to <= 2 ulp — XLA reassociates the weighted-sum chain
+differently for different window shapes (DESIGN.md §4).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 from typing import Optional
 
 import jax
@@ -48,27 +59,31 @@ def run_device_loop(x, spec: StencilSpec, steps: int):
 
 def run_resident(x, spec: StencilSpec, steps: int, *,
                  chip: Chip = TPU_V5E, cached_rows: Optional[int] = None,
-                 sub_rows: int = 128):
+                 sub_rows: int = 128, fuse_steps: int = 1):
     """Full PERKS: Pallas kernel, VMEM-resident rows chosen by the cache
-    policy (interior-first; halo never cached)."""
+    policy (interior-first; halo never cached). ``fuse_steps=t`` advances
+    t steps per HBM streaming pass (temporal blocking, DESIGN.md §4); the
+    planner accounts for the t-wider streaming window."""
     if cached_rows is None:
         cached_rows = plan_resident_planes(
-            x.shape, x.dtype.itemsize, spec, chip=chip, sub_rows=sub_rows)
+            x.shape, x.dtype.itemsize, spec, chip=chip, sub_rows=sub_rows,
+            fuse_steps=fuse_steps)
     if cached_rows >= x.shape[0]:
         return kops.stencil_resident(x, spec=spec, steps=steps)
     return kops.stencil_perks(x, spec=spec, steps=steps,
-                              cached_rows=cached_rows, sub_rows=sub_rows)
+                              cached_rows=cached_rows, sub_rows=sub_rows,
+                              fuse_steps=fuse_steps)
 
 
 def plan_for(x_shape, dtype_bytes, spec: StencilSpec, *,
-             chip: Chip = TPU_V5E, sub_rows: int = 128):
-    """Cache plan + projected speedup for reporting (paper Eqs. 5-11)."""
+             chip: Chip = TPU_V5E, sub_rows: int = 128,
+             fuse_steps: int = 1):
+    """Cache plan + projected speedup for reporting (paper Eqs. 5-11).
+    Host-side arithmetic on static shapes only — no device ops."""
     rows = plan_resident_planes(x_shape, dtype_bytes, spec, chip=chip,
-                                sub_rows=sub_rows)
-    row_elems = 1
-    for d in x_shape[1:]:
-        row_elems *= d
-    domain = int(jnp.prod(jnp.array(x_shape)))
+                                sub_rows=sub_rows, fuse_steps=fuse_steps)
+    row_elems = math.prod(x_shape[1:])
+    domain = math.prod(x_shape)
     cached = rows * row_elems
     return {"cached_rows": rows, "cached_cells": cached,
             "cached_fraction": cached / domain}
@@ -76,39 +91,90 @@ def plan_for(x_shape, dtype_bytes, spec: StencilSpec, *,
 
 # -- multi chip ----------------------------------------------------------------
 
-def make_distributed_step(spec: StencilSpec, mesh: Mesh, axis: str = "data"):
-    """One distributed time step: halo exchange + local update, inside
-    shard_map over ``axis`` (leading-dim row partition)."""
+def make_distributed_step(spec: StencilSpec, mesh: Mesh, axis: str = "data",
+                          *, fuse_steps: int = 1):
+    """``fuse_steps`` distributed time steps per halo exchange, inside
+    shard_map over ``axis`` (leading-dim row partition).
+
+    ``fuse_steps=1`` is the classic step: exchange ``radius`` boundary rows,
+    update locally. ``fuse_steps=t`` exchanges a ``radius*t`` wide halo ONCE
+    and applies the stencil t times to the extended window, which shrinks by
+    ``radius`` per application — the halo region is redundantly recomputed
+    instead of re-exchanged (temporal blocking, DESIGN.md §4). The global
+    Dirichlet border is re-frozen after every inner application, so the
+    fused step performs exactly the arithmetic of t exchanged steps
+    (agreement to <= 2 ulp on real backends; see DESIGN.md §4).
+    """
     r = spec.radius
+    t = fuse_steps
 
     def local_step(x_l):
-        top, bot = halo_exchange(x_l, r, axis)
-        xp = jnp.concatenate([top, x_l, bot], axis=0)
-        upd = spec.apply_rows(xp, r, xp.shape[0] - r)
-        # global Dirichlet border: freeze first/last `r` rows of the
-        # *global* domain (shards at the ends)
+        h = x_l.shape[0]
         n = axis_size(axis)
         idx = jax.lax.axis_index(axis)
-        out = upd
-        row = jnp.arange(x_l.shape[0])
-        is_top_edge = (idx == 0) & (row < r)
-        is_bot_edge = (idx == n - 1) & (row >= x_l.shape[0] - r)
-        frozen = is_top_edge | is_bot_edge
-        shape = (x_l.shape[0],) + (1,) * (x_l.ndim - 1)
-        return jnp.where(frozen.reshape(shape), x_l, out)
+        H = h * n                      # global leading extent
+        top, bot = halo_exchange(x_l, r * t, axis)
+        w = jnp.concatenate([top, x_l, bot], axis=0)
+        lo = idx * h - r * t           # global row index of w[0] (<0 at edges)
+        for _ in range(t):
+            L = w.shape[0]
+            upd = spec.apply_rows(w, r, L - r)
+            # freeze the first/last `r` rows of the *global* domain; rows
+            # outside the domain (edge shards' zero-filled halo) fall under
+            # the same mask and only ever feed other frozen rows.
+            rows = lo + r + jnp.arange(L - 2 * r)
+            frozen = (rows < r) | (rows >= H - r)
+            shape = (L - 2 * r,) + (1,) * (x_l.ndim - 1)
+            w = jnp.where(frozen.reshape(shape), w[r:L - r], upd)
+            lo = lo + r
+        return w
 
     pspec = P(axis, *([None] * (spec.ndim - 1)))
     return smap(local_step, mesh=mesh, in_specs=(pspec,),
                 out_specs=pspec)
 
 
+def fusion_schedule(steps: int, fuse_steps: int) -> list[tuple[int, int]]:
+    """How ``steps`` decompose into fused chunks: ``[(n_chunks, chunk_t)]``
+    with one halo exchange per chunk — ceil(steps/fuse_steps) exchanges
+    total. A non-dividing tail gets one narrower chunk (its halo is only
+    ``radius * tail`` wide), never an overshoot."""
+    full, rem = divmod(steps, fuse_steps)
+    sched = []
+    if full:
+        sched.append((full, fuse_steps))
+    if rem:
+        sched.append((1, rem))
+    return sched
+
+
 def run_distributed(x, spec: StencilSpec, steps: int, mesh: Mesh,
                     *, axis: str = "data",
-                    execution: perks.Execution = perks.Execution.DEVICE_LOOP):
-    """Multi-chip PERKS stencil: per-step halo ppermute is the device-wide
-    barrier; the time loop is fused (DEVICE_LOOP) or host-driven."""
-    step = make_distributed_step(spec, mesh, axis)
-    runner = perks.persistent(step, steps,
-                              perks.PerksConfig(execution=execution))
+                    execution: perks.Execution = perks.Execution.DEVICE_LOOP,
+                    fuse_steps: int = 1):
+    """Multi-chip PERKS stencil: the halo ppermute is the device-wide
+    barrier; the time loop is fused (DEVICE_LOOP) or host-driven.
+
+    ``fuse_steps=t`` issues one ``radius*t``-wide exchange per t steps —
+    ceil(steps/t) collectives instead of ``steps`` — and performs the
+    exact per-step arithmetic (<= 2 ulp agreement on real backends, see
+    DESIGN.md §4). Requires ``radius*t`` rows per shard (the halo must
+    come from the adjacent neighbour only).
+    """
+    t = int(fuse_steps)
+    n = int(dict(mesh.shape)[axis])
+    shard_rows = x.shape[0] // n
+    if t < 1:
+        raise ValueError(f"fuse_steps must be >= 1, got {t}")
+    if spec.radius * min(t, steps) > shard_rows:
+        raise ValueError(
+            f"fuse_steps={t} needs a {spec.radius * t}-row halo but shards "
+            f"have only {shard_rows} rows ({x.shape[0]} over {n} shards)")
     with mesh:
-        return runner(x)
+        for n_chunks, chunk_t in fusion_schedule(steps, t):
+            step = make_distributed_step(spec, mesh, axis,
+                                         fuse_steps=chunk_t)
+            runner = perks.persistent(
+                step, n_chunks, perks.PerksConfig(execution=execution))
+            x = runner(x)
+    return x

@@ -12,8 +12,17 @@ compute bit-identical results (DESIGN.md §2). This asserts it for every
     <= 1 ulp. XLA is free to contract mul+add into FMA differently for the
     subtiled slices, so bit-equality is not guaranteed there by any
     backend; the tolerance below is two ulps of the O(1) cell values.
+
+Temporal blocking (DESIGN.md §4): ``fuse_steps=t`` performs the exact
+per-step arithmetic through wider windows, so the same ulp caveat
+applies — fused results must agree with per-step execution to <= 2 ulp
+per 5 steps, distributed (wide-halo exchange) and resident (multi-step
+HBM pass) alike. The distributed variant must additionally issue exactly
+ceil(steps/t) halo exchanges, asserted by counting ``ppermute``s in the
+traced jaxpr (scan trip counts multiplied through).
 """
 import functools
+import textwrap
 
 import jax
 import jax.numpy as jnp
@@ -58,3 +67,177 @@ def test_partial_caching_within_ulp(name):
                                          sub_rows=8)
     np.testing.assert_allclose(np.asarray(perks_partial), np.asarray(device),
                                rtol=0, atol=2.5e-7)
+
+
+# -- temporal blocking: resident tier (multi-step HBM passes) -------------------
+
+@pytest.mark.parametrize("name", sorted(BENCHMARKS))
+@pytest.mark.parametrize("fuse", [2, 4])
+def test_resident_fused_matches_per_step(name, fuse):
+    """5 steps with t steps per HBM pass == 5 per-step passes (exercises the
+    remainder pass: 5 = 2+2+1 for t=2, 4+1 for t=4)."""
+    spec = get_spec(name)
+    x = _domain(spec)
+    steps = 5
+    base = stencil.run_resident(x, spec, steps, cached_rows=x.shape[0] // 2,
+                                sub_rows=32)
+    fused = stencil.run_resident(x, spec, steps, cached_rows=x.shape[0] // 2,
+                                 sub_rows=32, fuse_steps=fuse)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(base),
+                               rtol=0, atol=5e-7)
+    # and against the jnp oracle at the usual kernel tolerance
+    np.testing.assert_allclose(np.asarray(fused),
+                               np.asarray(ref.stencil_run(x, spec, steps)),
+                               rtol=0, atol=1e-5)
+
+
+def test_fusion_schedule_covers_steps_with_ceil_barriers():
+    for steps in (1, 2, 5, 7, 12):
+        for t in (1, 2, 3, 4, 16):
+            sched = stencil.fusion_schedule(steps, t)
+            assert sum(n * ct for n, ct in sched) == steps
+            assert sum(n for n, _ in sched) == -(-steps // t)  # ceil
+            assert all(ct <= t for _, ct in sched)
+
+
+# -- temporal blocking: distributed tier (wide-halo exchange) -------------------
+
+_DIST_FUSED = """
+    import json, jax, jax.numpy as jnp, numpy as np
+    from repro.kernels.common import BENCHMARKS
+    from repro.kernels import ref
+    from repro.solvers import stencil
+    from repro.dist.mesh import make_mesh
+
+    mesh = make_mesh((4,), ("data",))
+    out = {{}}
+    for name, spec in BENCHMARKS.items():
+        if spec.ndim != {ndim}:
+            continue
+        shape = (64, 128) if spec.ndim == 2 else (32, 12, 16)
+        shard = shape[0] // 4
+        x = jax.random.normal(jax.random.key(0), shape, jnp.float32)
+        base = stencil.run_distributed(x, spec, 5, mesh, fuse_steps=1)
+        oracle_err = float(jnp.abs(base - ref.stencil_run(x, spec, 5)).max())
+        rows = {{"oracle_err": oracle_err}}
+        for t in (2, 4):
+            if spec.radius * t > shard:
+                try:
+                    stencil.run_distributed(x, spec, 5, mesh, fuse_steps=t)
+                    rows[str(t)] = "missing ValueError"
+                except ValueError:
+                    rows[str(t)] = "infeasible"
+                continue
+            got = stencil.run_distributed(x, spec, 5, mesh, fuse_steps=t)
+            rows[str(t)] = float(jnp.abs(got - base).max())
+        out[name] = rows
+    print(json.dumps(out))
+"""
+
+
+@pytest.mark.parametrize("ndim", [2, 3])
+def test_distributed_fused_matches_per_step(ndim, dist_run):
+    """fuse_steps in {2, 4} vs per-step exchange over every spec: <= 2 ulp
+    (the windows compile to differently-shaped XLA programs; see DESIGN.md
+    §4), and a clean ValueError when the fused halo outgrows the shard."""
+    res = dist_run(_DIST_FUSED.format(ndim=ndim), n_dev=8, timeout=600)
+    specs = {n for n, s in BENCHMARKS.items() if s.ndim == ndim}
+    assert set(res) == specs
+    for name, rows in res.items():
+        assert rows["oracle_err"] < 1e-5, (name, rows)
+        for t in ("2", "4"):
+            if rows[t] == "infeasible":
+                continue
+            assert isinstance(rows[t], float) and rows[t] <= 5e-7, (name, rows)
+
+
+def test_distributed_fused_collective_count(dist_run):
+    """The tentpole guarantee: fuse_steps=t issues exactly ceil(steps/t)
+    halo exchanges (2 ppermutes each), counted in the traced jaxpr with
+    scan trip counts multiplied through."""
+    res = dist_run(textwrap.dedent("""
+        import json, jax, jax.numpy as jnp
+        from repro.kernels.common import get_spec
+        from repro.solvers import stencil
+        from repro.dist.mesh import make_mesh
+
+        def count_ppermute(jx, mult=1):
+            n = 0
+            for eqn in jx.eqns:
+                if eqn.primitive.name == "ppermute":
+                    n += mult
+                m = (mult * eqn.params["length"]
+                     if eqn.primitive.name == "scan" else mult)
+                for v in eqn.params.values():
+                    for s in (v if isinstance(v, (tuple, list)) else (v,)):
+                        inner = getattr(s, "jaxpr", s)
+                        if hasattr(inner, "eqns"):
+                            n += count_ppermute(inner, m)
+            return n
+
+        mesh = make_mesh((4,), ("data",))
+        spec = get_spec("2d5pt")
+        x = jnp.zeros((64, 128), jnp.float32)
+        out = {}
+        for t in (1, 2, 4):
+            jx = jax.make_jaxpr(lambda x: stencil.run_distributed(
+                x, spec, 7, mesh, fuse_steps=t))(x)
+            out[str(t)] = count_ppermute(jx.jaxpr)
+        print(json.dumps(out))
+    """), n_dev=8, timeout=600)
+    # 7 steps: t=1 -> 7 exchanges, t=2 -> 4 (2+2+2+1), t=4 -> 2 (4+3);
+    # each exchange is a fwd+bwd ppermute pair.
+    assert res == {"1": 14, "2": 8, "4": 4}
+
+
+def test_distributed_cg_fused_reductions(dist_run):
+    """Pipelined CG: ONE psum per iteration (vs two), matching textbook CG
+    even past convergence (banded_4k reaches machine-zero residual well
+    before iteration 25 — the regime where an unguarded recurrence
+    explodes; see solvers/cg.py)."""
+    res = dist_run("""
+        import json, jax, jax.numpy as jnp
+        from repro.solvers import cg
+        from repro.kernels import ref
+        from repro.dist.mesh import make_mesh
+
+        def count_psum(jx, mult=1):
+            n = 0
+            for eqn in jx.eqns:
+                if eqn.primitive.name == "psum":
+                    n += mult
+                m = (mult * eqn.params["length"]
+                     if eqn.primitive.name == "scan" else mult)
+                for v in eqn.params.values():
+                    for s in (v if isinstance(v, (tuple, list)) else (v,)):
+                        inner = getattr(s, "jaxpr", s)
+                        if hasattr(inner, "eqns"):
+                            n += count_psum(inner, m)
+            return n
+
+        mesh = make_mesh((8,), ("data",))
+        out = {}
+        for ds, iters in (("banded_4k", 25), ("poisson_64", 25)):
+            data, cols = cg.load_dataset(ds)
+            b = jax.random.normal(jax.random.key(1), (data.shape[0],),
+                                  jnp.float32)
+            x_ref, rr_ref = ref.cg_run(data, cols, b, iters)
+            x_f, rr_f = cg.run_distributed(data, cols, b, iters, mesh,
+                                           fuse_reductions=True)
+            scale = float(jnp.abs(x_ref).max())
+            out[ds] = {"rel_err": float(jnp.abs(x_f - x_ref).max()) / scale,
+                       "rr": float(rr_f), "rr_ref": float(rr_ref)}
+        data, cols = cg.load_dataset("poisson_64")
+        b = jnp.ones((data.shape[0],))
+        for fused, key in ((True, "fused"), (False, "textbook")):
+            jx = jax.make_jaxpr(lambda b: cg.run_distributed(
+                data, cols, b, 5, mesh, fuse_reductions=fused))(b)
+            out[key + "_psums"] = count_psum(jx.jaxpr)
+        print(json.dumps(out))
+    """, n_dev=8, timeout=600)
+    assert res["fused_psums"] == 5          # one chunked sync per iteration
+    assert res["textbook_psums"] == 10      # two dependent syncs
+    for ds in ("banded_4k", "poisson_64"):
+        assert res[ds]["rel_err"] < 1e-4, res[ds]
+        assert abs(res[ds]["rr"] - res[ds]["rr_ref"]) <= \
+            1e-3 * (res[ds]["rr_ref"] + 1e-12), res[ds]

@@ -8,8 +8,10 @@ import pytest
 from _hyp import given, settings, st  # optional-dep shim (tests/_hyp.py)
 
 from repro.core import perks
-from repro.core.cache_policy import (CacheableArray, plan_caching,
-                                     cg_arrays, stencil_arrays)
+from repro.core.cache_policy import (CacheableArray, gm_bytes_fused,
+                                     plan_caching, plan_fuse_steps,
+                                     cg_arrays, stencil_arrays,
+                                     stencil_shard_arrays)
 from repro.core.hardware import A100, TPU_V5E
 from repro.core.perf_model import (project_perks, project_host_loop,
                                    projected_speedup, gm_bytes_accessed,
@@ -41,11 +43,54 @@ def test_chunked_early_stop():
     assert calls == [10, 20, 30]
 
 
+def test_chunked_early_stop_state_is_partially_advanced():
+    """Early exit must return the state as of the sync point it stopped at —
+    the partially-advanced array, not the fully-run one."""
+    spec = get_spec("2d5pt")
+    x = jax.random.normal(jax.random.key(1), (16, 64), jnp.float32)
+    step = functools.partial(ref.stencil_step, spec=spec)
+    out = perks.chunked_loop(step, 100, sync_every=3,
+                             on_sync=lambda s, k: k >= 6)(x)
+    want = perks.device_loop(step, 6, donate=False)(x)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+def test_chunked_loop_non_dividing_runs_exact_step_count():
+    """sync_every that does not divide n_steps: the tail chunk fuses only
+    the remainder — exactly n_steps applications, ceil(n/k) dispatches."""
+    calls = []
+    run = perks.chunked_loop(lambda s: s + 1, 7, sync_every=3, donate=False,
+                             on_sync=lambda s, k: calls.append(k) or False)
+    assert int(run(jnp.int32(0))) == 7
+    assert calls == [3, 6, 7]
+
+
 def test_scan_loop_collects_outputs():
     step = lambda s, _: (s * 2, s)
     final, outs = perks.scan_loop(step, 4, donate=False)(jnp.float32(1.0))
     assert float(final) == 16.0
     np.testing.assert_allclose(outs, [1, 2, 4, 8])
+
+
+# -- temporal blocking (fuse_steps) ----------------------------------------------
+
+def test_perks_config_validates_fuse_steps():
+    with pytest.raises(ValueError):
+        perks.PerksConfig(fuse_steps=0)
+    with pytest.raises(ValueError):
+        perks.PerksConfig(sync_every=0)
+    assert perks.PerksConfig(fuse_steps=4).fuse_steps == 4
+
+
+def test_host_loop_fuse_steps_cuts_dispatch_count():
+    """HOST_LOOP with fuse_steps=t: the dispatch is the barrier, so the
+    runner must come back to the host only ceil(n/t) times."""
+    syncs = []
+    cfg = perks.PerksConfig(execution=perks.Execution.HOST_LOOP, fuse_steps=4)
+    run = perks.persistent(lambda s: s + 1, 10, cfg,
+                           on_sync=lambda s, k: syncs.append(k) or False)
+    assert int(run(jnp.int32(0))) == 10
+    assert syncs == [4, 8, 10]  # ceil(10/4) = 3 barriers
 
 
 # -- cache policy properties -----------------------------------------------------
@@ -99,6 +144,38 @@ def test_gm_traffic_monotone_in_cache(n_steps, domain, cached):
     full = gm_bytes_accessed(n_steps, domain, domain)
     assert full <= with_cache + 1e-9
     assert full == 2 * domain  # initial load + final store only
+
+
+def test_temporal_block_widens_uncached_ring():
+    """fuse_steps=t widens the boundary/halo ring r -> r*t, shrinking the
+    fully-elidable interior (generalized Eq. 5's uncached ring)."""
+    a1 = {a.name: a.bytes for a in stencil_shard_arrays(128, 10, 2)}
+    a4 = {a.name: a.bytes for a in stencil_shard_arrays(128, 10, 2,
+                                                        fuse_steps=4)}
+    assert a1["interior"] == (128 - 4) * 10 and a4["interior"] == (128 - 16) * 10
+    assert a4["boundary"] == 4 * a1["boundary"]
+    assert a4["halo"] == 4 * a1["halo"]
+
+
+def test_gm_bytes_fused_recovers_and_beats_eq5():
+    dom, cached, rb, r, N = 10_000, 0, 10, 2, 100
+    base = gm_bytes_fused(N, dom, cached, row_bytes=rb, radius=r, fuse_steps=1)
+    assert base == N * (2 * dom + 2 * r * rb)  # Eq. 5 + per-step halo re-read
+    fused = gm_bytes_fused(N, dom, cached, row_bytes=rb, radius=r,
+                           fuse_steps=4)
+    assert fused < base            # t x fewer passes dominates the overlap
+    full = gm_bytes_fused(N, dom, dom, row_bytes=rb, radius=r, fuse_steps=4)
+    assert full == 2 * dom         # fully cached: initial load + final store
+
+
+def test_plan_fuse_steps_respects_shard_and_counts_barriers():
+    p = plan_fuse_steps(100, shard_rows=16, row_bytes=10, radius=3)
+    assert p.fuse_steps == 5                   # 16 // 3
+    assert p.barriers == 20                    # ceil(100/5)
+    assert p.halo_rows_per_exchange == 2 * 3 * 5
+    p1 = plan_fuse_steps(100, shard_rows=2, row_bytes=10, radius=2)
+    assert p1.fuse_steps == 1 and p1.barriers == 100
+    assert p1.redundant_row_updates == 0
 
 
 # -- performance model (paper §IV-B worked examples) -----------------------------
