@@ -1,9 +1,22 @@
-"""Paper Fig. 7 / Fig. 9 analog: PERKS conjugate gradient.
+"""Paper Fig. 7 / Fig. 9 analog: PERKS conjugate gradient on the
+SuiteSparse-proxy suite.
 
-Measured: host-loop vs PERKS device-loop per CG iteration on the synthetic
-SPD suite (datasets straddle the on-chip capacity the way Fig. 7 straddles
-L2). Policy columns (IMP/VEC/MAT/MIX) report the cache planner's selection
-and the Eq. 5-10 projected per-iteration traffic saving on v5e.
+Two row families (schema details in docs/BENCHMARKS.md):
+
+``cg_dataset_<name>`` — one row per ``repro.sparse`` registry dataset,
+sweeping the Fig. 9 execution policies on identical data: IMP (device
+loop, nothing explicitly resident), VEC (fused kernel, vectors resident,
+A streamed) and MIX (fused kernel, vectors + A resident), plus the
+host-loop baseline, the planner's policy at the real v5e budget and at
+the scaled proxy capacity the datasets straddle (Fig. 7's small/large
+regime split), and the ELL vs SELL-C-σ fill ratios.
+
+``cg_format_<name>`` — SELL-C-σ vs ELL device-loop CG on the irregular
+datasets (quick mode keeps one so the CI smoke CSV always carries a
+format-regression row).
+
+The legacy synthetic suite is covered by ``cg_<name>`` rows (kept for
+CSV continuity with earlier commits).
 """
 from __future__ import annotations
 
@@ -12,39 +25,107 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.util import time_fn, row
-from repro.core.hardware import TPU_V5E
 from repro.solvers import cg as cgs
+from repro.sparse import REGISTRY, irregular_names
+from repro.sparse.generate import PROXY_ONCHIP_BYTES
 
-ITERS = 40
+ITERS = 24
 
 
 def run(quick: bool = False):
-    names = [n for n in cgs.DATASETS if n != "banded_64k"]
+    names = list(REGISTRY)
+    fmt_names = irregular_names()
     if quick:
-        names = ["poisson_64", "banded_4k"]
+        names = ["poisson2d_small", "graph_powerlaw_8k"]
+        fmt_names = ["graph_powerlaw_8k"]
+    iters = 10 if quick else ITERS
+
     speedups = []
+    csrs = {}
+
+    def matrix(name):
+        if name not in csrs:
+            csrs[name] = cgs.load_matrix(name)
+        return csrs[name]
+
     for name in names:
+        csr = matrix(name)
+        ell = csr.to_ell()
+        sell = csr.to_sell(c=32, sigma=256)
+        data, cols = jnp.asarray(ell.data), jnp.asarray(ell.cols)
+        n = csr.shape[0]
+        bm = cgs.fused_block_rows(n)
+        b = jax.random.normal(jax.random.key(1), (n,), jnp.float32)
+        t_host, _ = time_fn(lambda: cgs.run_host_loop(data, cols, b, iters),
+                            warmup=1, iters=3)
+        # the Fig. 9 execution-policy sweep on identical data
+        t_imp, _ = time_fn(lambda: cgs.run_device_loop(data, cols, b, iters),
+                           warmup=1, iters=3)
+        t_vec, _ = time_fn(lambda: cgs.run_fused(data, cols, b, iters,
+                                                 policy="VEC", block_rows=bm),
+                           warmup=1, iters=3)
+        t_mix, _ = time_fn(lambda: cgs.run_fused(data, cols, b, iters,
+                                                 policy="MIX", block_rows=bm),
+                           warmup=1, iters=3)
+        plan = cgs.plan_policy(matrix=csr)
+        regime = cgs.plan_policy(matrix=csr,
+                                 budget_bytes=PROXY_ONCHIP_BYTES)["policy"]
+        meas = t_host / t_imp
+        speedups.append(meas)
+        fill_e = ell.padding_report().fill_ratio
+        fill_s = sell.padding_report().fill_ratio
+        row(f"cg_dataset_{name}", t_imp / iters * 1e6,
+            f"host_us={t_host / iters * 1e6:.1f};speedup={meas:.2f}x;"
+            f"imp_us={t_imp / iters * 1e6:.1f};"
+            f"vec_us={t_vec / iters * 1e6:.1f};"
+            f"mix_us={t_mix / iters * 1e6:.1f};"
+            f"policy={plan['policy']};proxy_regime={regime};"
+            f"structure={REGISTRY[name].structure};"
+            f"nnz={csr.nnz};fill_ell={fill_e:.3f};fill_sell={fill_s:.3f}")
+
+    # SELL-C-sigma vs ELL CG on the irregular datasets (format regressions
+    # show up here: fill_sell must stay above fill_ell)
+    for name in fmt_names:
+        csr = matrix(name)
+        ell = csr.to_ell()
+        sell = csr.to_sell(c=32, sigma=256)
+        op = cgs.SellOperator.from_matrix(sell)
+        data, cols = jnp.asarray(ell.data), jnp.asarray(ell.cols)
+        b = jax.random.normal(jax.random.key(1), (csr.shape[0],), jnp.float32)
+        t_ell, _ = time_fn(lambda: cgs.run_device_loop(data, cols, b, iters),
+                           warmup=1, iters=3)
+        t_sell, _ = time_fn(
+            lambda: cgs.run_device_loop_sell(op, b, iters),
+            warmup=1, iters=3)
+        er = ell.padding_report()
+        sr = sell.padding_report()
+        row(f"cg_format_{name}", t_sell / iters * 1e6,
+            f"ell_us={t_ell / iters * 1e6:.1f};"
+            f"sell_us={t_sell / iters * 1e6:.1f};"
+            f"fill_ell={er.fill_ratio:.3f};fill_sell={sr.fill_ratio:.3f};"
+            f"bytes_ell={er.bytes};bytes_sell={sr.bytes};"
+            f"bytes_vs_csr_ell={er.bytes_vs_csr:.2f};"
+            f"bytes_vs_csr_sell={sr.bytes_vs_csr:.2f}")
+
+    # legacy synthetic suite (CSV continuity with pre-registry commits)
+    legacy = ["poisson_64", "banded_4k"] if quick else \
+        ["poisson_64", "poisson_128", "poisson_256", "banded_4k",
+         "banded_16k"]
+    for name in legacy:
         data, cols = cgs.load_dataset(name)
         n, k = data.shape
         b = jax.random.normal(jax.random.key(1), (n,), jnp.float32)
-        t_host, _ = time_fn(lambda: cgs.run_host_loop(data, cols, b, ITERS),
+        t_host, _ = time_fn(lambda: cgs.run_host_loop(data, cols, b, iters),
                             warmup=1, iters=3)
-        t_dev, _ = time_fn(lambda: cgs.run_device_loop(data, cols, b, ITERS),
+        t_dev, _ = time_fn(lambda: cgs.run_device_loop(data, cols, b, iters),
                            warmup=1, iters=3)
         plan = cgs.plan_policy(n, n * k)
         meas = t_host / t_dev
         speedups.append(meas)
-        # projected PERKS gain: traffic with vs without the resident arrays
-        vec_bytes = 4 * n * 4
-        mat_bytes = n * k * 8
-        per_iter = vec_bytes * 2.25 + mat_bytes  # loads+stores weighted
-        saved = plan["traffic_saved_per_iter"]
-        proj = per_iter / max(per_iter - saved, mat_bytes * (1 - plan["matrix_fraction"]) + 1e-9)
-        row(f"cg_{name}", t_dev / ITERS * 1e6,
-            f"host_us={t_host / ITERS * 1e6:.1f};speedup={meas:.2f}x;"
+        row(f"cg_{name}", t_dev / iters * 1e6,
+            f"host_us={t_host / iters * 1e6:.1f};speedup={meas:.2f}x;"
             f"policy={plan['policy']};vec_frac={plan['vector_fraction']:.2f};"
-            f"mat_frac={plan['matrix_fraction']:.2f};"
-            f"tpu_projected={min(proj, 50):.2f}x")
+            f"mat_frac={plan['matrix_fraction']:.2f}")
     gm = float(np.exp(np.mean(np.log(speedups))))
     row("cg_geomean", 0.0, f"speedup={gm:.2f}x")
     return gm

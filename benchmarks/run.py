@@ -6,7 +6,10 @@ Prints ``name,us_per_call,derived`` CSV rows:
   stencil_small_*   Fig. 6  (small domains — fully VMEM-resident regime)
   stencil_fuse_*    beyond-paper: temporal blocking sweep (fuse_steps in
                     {1,2,4}; DESIGN.md §4, arXiv:2306.03336)
-  cg_*              Fig. 7  (CG suite, host vs PERKS + policy planner)
+  cg_dataset_*      Fig. 7/9 (SuiteSparse-proxy registry: IMP/VEC/MIX
+                    sweep + planner policy + ELL/SELL fill ratios)
+  cg_format_*       beyond-paper: SELL-C-σ vs ELL CG on irregular data
+  cg_*              Fig. 7  (legacy synthetic suite, host vs PERKS)
   where_cache_*     Fig. 8  (where/how much to cache sweep)
   what_cache_*      Fig. 9  (what to cache: CG policy matrix)
   concurrency_*     Table II (occupancy/working-set analog)

@@ -1,21 +1,61 @@
-"""Conjugate gradient under PERKS: solve a 2D Poisson system three ways.
+"""Conjugate gradient under PERKS: solve one sparse SPD system three ways.
 
     PYTHONPATH=src python examples/cg_solver.py
+    PYTHONPATH=src python examples/cg_solver.py --dataset graph_powerlaw_8k
+    PYTHONPATH=src python examples/cg_solver.py --list
+
+``--dataset`` accepts any name from the SuiteSparse-proxy registry
+(``repro.sparse.generate``) or the legacy synthetic suite; the solve is
+preceded by the cache planner's policy choice and the ELL vs SELL-C-σ
+padding report for the chosen matrix.
 """
+import argparse
 import time
 
 import jax
 import jax.numpy as jnp
 
 from repro.solvers import cg
+from repro.sparse import REGISTRY, choose_format
+from repro.sparse.generate import PROXY_ONCHIP_BYTES
 
 
 def main():
-    data, cols = cg.load_dataset("poisson_128")
-    n = data.shape[0]
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dataset", default="poisson_128",
+                    help="registry or legacy dataset name")
+    ap.add_argument("--iters", type=int, default=60)
+    ap.add_argument("--list", action="store_true",
+                    help="list available datasets and exit")
+    args = ap.parse_args()
+    if args.list:
+        for name in cg.DATASETS:
+            spec = REGISTRY.get(name)
+            note = f"  [{spec.structure}] {spec.note}" if spec else "  [legacy]"
+            print(f"{name:20s}{note}")
+        return
+
+    csr = cg.load_matrix(args.dataset)
+    n = csr.shape[0]
+    iters = args.iters
+
+    fmt, reports = choose_format(csr, c=32, sigma=256)
+    plan = cg.plan_policy(matrix=csr)
+    regime = cg.plan_policy(matrix=csr,
+                            budget_bytes=PROXY_ONCHIP_BYTES)["policy"]
+    print(f"dataset {args.dataset}: n={n}, nnz={csr.nnz}")
+    print(f"  planner        : policy={plan['policy']} "
+          f"(vectors {plan['vector_fraction']:.0%}, "
+          f"matrix {plan['matrix_fraction']:.0%} resident); "
+          f"proxy-capacity regime={regime}; format={fmt}")
+    for name, rep in reports.items():
+        print(f"  padding [{name:4s}] : fill={rep.fill_ratio:5.1%}  "
+              f"bytes={rep.bytes:>11,}  ({rep.bytes_vs_csr:.2f}x CSR)")
+
+    ell = csr.to_ell()
+    data, cols = jnp.asarray(ell.data), jnp.asarray(ell.cols)
     b = jax.random.normal(jax.random.key(0), (n,), jnp.float32)
     bb = float(jnp.vdot(b, b))
-    iters = 60
 
     t0 = time.perf_counter()
     x_h, rr_h = cg.run_host_loop(data, cols, b, iters)
@@ -28,20 +68,26 @@ def main():
     jax.block_until_ready(x_d)
     t_d = time.perf_counter() - t0
 
-    x_f, rr_f = cg.run_fused(data, cols, b, iters, policy="MIX",
-                             block_rows=256)
+    x_f, rr_f = cg.run_fused(data, cols, b, iters, policy=plan["policy"]
+                             if plan["policy"] in ("VEC", "MIX") else "MIX",
+                             block_rows=cg.fused_block_rows(n))
 
-    print(f"CG on {n}x{n} Poisson, {iters} iters (|b|^2 = {bb:.1f})")
+    print(f"CG {args.dataset} (n={n}), {iters} iters (|b|^2 = {bb:.1f})")
     print(f"  host loop      : {t_h * 1e3:7.1f} ms, "
           f"rr/bb = {float(rr_h) / bb:.2e}")
     print(f"  PERKS fused    : {t_d * 1e3:7.1f} ms "
           f"({t_h / t_d:.2f}x), rr/bb = {float(rr_d) / bb:.2e}")
     print(f"  PERKS kernel   : rr/bb = {float(rr_f) / bb:.2e} "
           f"(whole loop in one Pallas kernel, vectors VMEM-resident)")
-    plan = cg.plan_policy(n, int(data.size))
-    print(f"  cache policy   : {plan['policy']} "
-          f"(vectors {plan['vector_fraction']:.0%}, "
-          f"matrix {plan['matrix_fraction']:.0%} resident)")
+    if fmt == "sell":
+        op = cg.SellOperator.from_matrix(csr.to_sell(c=32, sigma=256))
+        t0 = time.perf_counter()
+        x_s, rr_s = cg.run_device_loop_sell(op, b, iters)
+        jax.block_until_ready(x_s)
+        t_s = time.perf_counter() - t0
+        print(f"  SELL-C-σ loop  : {t_s * 1e3:7.1f} ms, "
+              f"rr/bb = {float(rr_s) / bb:.2e} "
+              f"(per-slice K kernel on the planner-chosen format)")
 
 
 if __name__ == "__main__":

@@ -21,6 +21,7 @@ from repro.core.cache_policy import (
     plan_caching,
     stencil_arrays,
     cg_arrays,
+    cg_arrays_for,
 )
 from repro.core.perf_model import (
     PerksProjection,

@@ -239,3 +239,15 @@ def cg_arrays(n_rows: int, nnz: int, dtype_bytes: int, index_bytes: int = 4) -> 
         CacheableArray("Ap", vec, 2.0, 1.0),
         CacheableArray("A", nnz * (dtype_bytes + index_bytes), 1.0, 0.0),
     ]
+
+
+def cg_arrays_for(matrix) -> list[CacheableArray]:
+    """``cg_arrays`` from a ``repro.sparse`` container (COO/CSR/ELL/SELL).
+
+    Duck-typed on ``shape``/``nnz``/``data.dtype`` so this module stays
+    dependency-free. Uses the container's **true** nnz — for padded
+    formats the planner must rank A by the bytes it actually streams,
+    not the zero-filled slots (a power-law ELL would otherwise look 37x
+    its real cost and spuriously evict the vectors).
+    """
+    return cg_arrays(matrix.shape[0], matrix.nnz, matrix.data.dtype.itemsize)

@@ -16,6 +16,7 @@ from repro.kernels import ref
 from repro.kernels.common import StencilSpec, get_spec
 from repro.kernels import stencil2d as _s2d
 from repro.kernels import spmv_ell as _spmv
+from repro.kernels import spmv_sell as _sell
 from repro.kernels import cg_fused as _cg
 from repro.kernels import ssm_scan as _ssm
 from repro.kernels import decode_attn as _da
@@ -52,6 +53,15 @@ def stencil_baseline_step(x, *, spec: StencilSpec, sub_rows: int = 128):
 def spmv(data, cols, x, *, block_rows: int = 256):
     """Block-ELL SpMV with the dense vector VMEM-resident."""
     return _spmv.spmv_ell(data, cols, x, block_rows=block_rows)
+
+
+@functools.partial(jax.jit, static_argnames=("c", "k_max"))
+def spmv_sell(data, cols, slice_offsets, slice_k, x, *, c: int, k_max: int):
+    """SELL-C-σ SpMV (x VMEM-resident; per-slice K via the scalar-
+    prefetched offset table). Returns the permuted padded result; gather
+    with ``SellMatrix.row_positions()`` to restore row order."""
+    return _sell.spmv_sell(data, cols, slice_offsets, slice_k, x,
+                           c=c, k_max=k_max)
 
 
 @functools.partial(jax.jit, static_argnames=("iters", "resident_matrix", "block_rows"))

@@ -39,6 +39,26 @@ def spmv_ell(data: jax.Array, cols: jax.Array, x: jax.Array) -> jax.Array:
     return jnp.sum(data * x[cols], axis=1)
 
 
+def spmv_sell(data, cols, slice_offsets, slice_k, x, *, c: int):
+    """y_perm = A_perm @ x for A in SELL-C-σ flat slot-major layout
+    (oracle for ``kernels/spmv_sell.py``; same permuted padded output).
+
+    Host loop over slices with per-slice exact widths — no masking, so
+    it cross-checks the kernel's fixed-window masking logic. Not jit-
+    friendly (slice widths become Python ints); test/oracle use only.
+    """
+    import numpy as np
+    offs = np.asarray(slice_offsets)
+    ks = np.asarray(slice_k)
+    ys = []
+    for s in range(len(ks)):
+        k, off = int(ks[s]), int(offs[s])
+        blk_d = data[off:off + c * k].reshape(k, c)
+        blk_c = cols[off:off + c * k].reshape(k, c)
+        ys.append(jnp.sum(blk_d * x[blk_c], axis=0))
+    return jnp.concatenate(ys)
+
+
 # -- conjugate gradient (one iteration; fused-kernel oracle runs many) -------
 
 def _safe_div(a, b):
@@ -47,10 +67,11 @@ def _safe_div(a, b):
     return jnp.where(jnp.abs(b) > 0, a / jnp.where(b == 0, 1.0, b), 0.0)
 
 
-def cg_iteration(state, data, cols):
-    """One textbook CG iteration on ELL-format A. state = (x, r, p, rr)."""
+def cg_iteration_matvec(state, matvec):
+    """One textbook CG iteration with a pluggable SpMV (ELL kernel, SELL
+    kernel, distributed local matvec...). state = (x, r, p, rr)."""
     x, r, p, rr = state
-    ap = spmv_ell(data, cols, p)
+    ap = matvec(p)
     alpha = _safe_div(rr, jnp.vdot(p, ap))
     x = x + alpha * p
     r = r - alpha * ap
@@ -58,6 +79,11 @@ def cg_iteration(state, data, cols):
     beta = _safe_div(rr_new, rr)
     p = r + beta * p
     return (x, r, p, rr_new)
+
+
+def cg_iteration(state, data, cols):
+    """One textbook CG iteration on ELL-format A. state = (x, r, p, rr)."""
+    return cg_iteration_matvec(state, lambda p: spmv_ell(data, cols, p))
 
 
 def cg_run(data, cols, b, iters: int):

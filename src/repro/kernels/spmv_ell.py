@@ -55,12 +55,19 @@ def spmv_ell(
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     bm = min(block_rows, n_rows)
-    assert n_rows % bm == 0, "pad n_rows to a multiple of block_rows"
-    grid = (n_rows // bm,)
-    return pl.pallas_call(
+    # auto-pad the row dimension to a block multiple (zero rows: data 0,
+    # col 0 -> y 0) and slice the result back, so arbitrary sizes work
+    n_pad = -(-n_rows // bm) * bm
+    if n_pad != n_rows:
+        data = jnp.concatenate(
+            [data, jnp.zeros((n_pad - n_rows, k), data.dtype)])
+        cols = jnp.concatenate(
+            [cols, jnp.zeros((n_pad - n_rows, k), cols.dtype)])
+    grid = (n_pad // bm,)
+    y = pl.pallas_call(
         _spmv_kernel,
         grid=grid,
-        out_shape=jax.ShapeDtypeStruct((n_rows,), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), x.dtype),
         in_specs=[
             pl.BlockSpec((bm, k), lambda i: (i, 0), memory_space=pltpu.VMEM),
             pl.BlockSpec((bm, k), lambda i: (i, 0), memory_space=pltpu.VMEM),
@@ -69,19 +76,31 @@ def spmv_ell(
         out_specs=pl.BlockSpec((bm,), lambda i: (i,), memory_space=pltpu.VMEM),
         interpret=interpret,
     )(data, cols, x)
+    return y if n_pad == n_rows else y[:n_rows]
 
 
 # -- host-side ELL construction helpers (numpy; data-prep, not hot path) ----
 
 def dense_to_ell(a: np.ndarray, k: Optional[int] = None):
-    """Convert a dense matrix to ELL (data, cols) with per-row padding."""
+    """Convert a dense matrix to ELL (data, cols) with per-row padding.
+
+    An explicit ``k`` smaller than some row's nnz raises (naming the
+    offending row) — silently dropping entries would corrupt the
+    operator.
+    """
     n = a.shape[0]
     nnz_per_row = (a != 0).sum(axis=1)
-    k = int(nnz_per_row.max()) if k is None else k
+    if k is None:
+        k = int(nnz_per_row.max()) if n else 1
+    elif n and nnz_per_row.max() > k:
+        bad = int(np.argmax(nnz_per_row > k))
+        raise ValueError(
+            f"ELL k={k} cannot hold row {bad} with {int(nnz_per_row[bad])} "
+            f"nonzeros (max row nnz is {int(nnz_per_row.max())})")
     data = np.zeros((n, k), a.dtype)
     cols = np.zeros((n, k), np.int32)
     for i in range(n):
-        idx = np.nonzero(a[i])[0][:k]
+        idx = np.nonzero(a[i])[0]
         data[i, : len(idx)] = a[i, idx]
         cols[i, : len(idx)] = idx
     return data, cols

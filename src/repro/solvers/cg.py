@@ -12,16 +12,25 @@ Execution tiers (Fig. 7/9 reproduction):
 
 Caching policies (Fig. 9): IMP = device_loop, nothing explicitly resident;
 VEC = vectors resident, A streamed; MAT/MIX = vectors + matrix resident.
-The policy ranking comes from ``core.cache_policy.cg_arrays`` (r > A).
+The policy ranking comes from ``core.cache_policy.cg_arrays`` (r > A),
+fed the **true** nnz from the ``repro.sparse`` containers — padded slots
+are a data-layout cost (``PaddingReport``), not a caching-priority input.
 
-Synthetic SPD datasets stand in for SuiteSparse (offline container):
-2D Poisson operators and banded random SPD matrices, sized to straddle the
-on-chip capacity boundary the way Fig. 7 straddles L2.
+Datasets: the SuiteSparse-proxy registry (``repro.sparse.generate``) —
+2D/3D Poisson, FEM-like variable band, graph Laplacians (random-regular
+and power-law), diagonally-shifted random sparse — sized to straddle a
+scaled on-chip capacity the way Fig. 7's suite straddles L2, plus the
+legacy synthetic names (``poisson_64``..., ``banded_64k``). Every entry
+loads as block-ELL (``load_dataset``); for irregular entries
+``load_sell`` + ``run_device_loop_sell`` is the recommended path — the
+SELL-C-σ layout pads per slice instead of to the global max row nnz
+(``repro.sparse.choose_format`` makes the call per matrix).
 
 Temporal blocking for CG (DESIGN.md §4): ``run_distributed`` with
 ``fuse_reductions=True`` merges the two dependent reduction barriers per
 iteration into one chunked psum via the pipelined-CG residual recurrence
-(arXiv:1410.4054) — the solver analogue of the stencils' ``fuse_steps``.
+(arXiv:1410.4054). ``partition="nnz"`` load-balances the row shards by
+nonzeros (``repro.sparse.partition``) instead of naive equal-rows.
 """
 from __future__ import annotations
 
@@ -36,52 +45,81 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import perks
 from repro.dist.sharding import smap
-from repro.core.cache_policy import cg_arrays, plan_caching
+from repro.core.cache_policy import cg_arrays, cg_arrays_for, plan_caching
 from repro.core.hardware import Chip, TPU_V5E
 from repro.kernels import ref as kref
 from repro.kernels import ops as kops
-from repro.kernels.spmv_ell import poisson2d_ell
+from repro.sparse import CSRMatrix, SellMatrix, shard_by_nnz
+from repro.sparse.generate import REGISTRY, banded_spd, poisson2d
 
 
 # -- datasets -------------------------------------------------------------------
 
 def banded_spd_ell(n: int, bands: int, seed: int = 0, dtype=np.float32):
-    """Random symmetric positive-definite banded matrix in ELL form."""
-    rng = np.random.default_rng(seed)
-    k = 2 * bands + 1
-    data = np.zeros((n, k), dtype)
-    cols = np.zeros((n, k), np.int32)
-    offs = rng.standard_normal((n, bands)).astype(dtype) * 0.1
-    for i in range(n):
-        slot = 0
-        data[i, slot] = 1.0 + bands * 0.2       # diagonal dominance -> SPD
-        cols[i, slot] = i
-        slot += 1
-        for b in range(1, bands + 1):
-            for j in (i - b, i + b):
-                if 0 <= j < n:
-                    v = offs[min(i, j), b - 1]
-                    data[i, slot] = v
-                    cols[i, slot] = j
-                    slot += 1
-    return data, cols
+    """Random SPD banded matrix in raw ELL form (legacy helper; the CSR
+    source of truth lives in ``repro.sparse.generate.banded_spd``)."""
+    ell = banded_spd(n, bands, seed=seed, dtype=dtype).to_ell()
+    return ell.data, ell.cols
 
 
+# name -> (constructor returning CSRMatrix, kwargs). Legacy synthetic
+# names kept verbatim; every repro.sparse registry entry rides along.
 DATASETS = {
-    # name: (constructor, kwargs) — sizes straddle the VMEM capacity
-    "poisson_64": (poisson2d_ell, {"side": 64}),
-    "poisson_128": (poisson2d_ell, {"side": 128}),
-    "poisson_256": (poisson2d_ell, {"side": 256}),
-    "banded_4k": (banded_spd_ell, {"n": 4096, "bands": 4}),
-    "banded_16k": (banded_spd_ell, {"n": 16384, "bands": 8}),
-    "banded_64k": (banded_spd_ell, {"n": 65536, "bands": 4}),
+    "poisson_64": (poisson2d, {"side": 64}),
+    "poisson_128": (poisson2d, {"side": 128}),
+    "poisson_256": (poisson2d, {"side": 256}),
+    "banded_4k": (banded_spd, {"n": 4096, "bands": 4}),
+    "banded_16k": (banded_spd, {"n": 16384, "bands": 8}),
+    "banded_64k": (banded_spd, {"n": 65536, "bands": 4}),
+    **{name: (spec.builder, spec.kwargs)
+       for name, spec in REGISTRY.items()},
 }
 
 
-def load_dataset(name: str):
+def load_matrix(name: str) -> CSRMatrix:
+    """Build one dataset as an exact CSR container (true nnz, row_nnz)."""
     fn, kw = DATASETS[name]
-    data, cols = fn(**kw)
-    return jnp.asarray(data), jnp.asarray(cols)
+    return fn(**kw)
+
+
+def load_dataset(name: str):
+    """Legacy entry point: dataset as device ELL planes (data, cols)."""
+    ell = load_matrix(name).to_ell()
+    return jnp.asarray(ell.data), jnp.asarray(ell.cols)
+
+
+@dataclasses.dataclass(frozen=True)
+class SellOperator:
+    """Device-resident SELL-C-σ operator: flat streams + slice tables +
+    the row-order-restoring gather. ``matvec`` runs the Pallas kernel
+    (``kernels/spmv_sell.py``) with x VMEM-resident."""
+
+    data: jax.Array
+    cols: jax.Array
+    slice_offsets: jax.Array
+    slice_k: jax.Array
+    positions: jax.Array       # original row -> permuted padded position
+    c: int
+    k_max: int
+    n_rows: int
+
+    @staticmethod
+    def from_matrix(sell: SellMatrix) -> "SellOperator":
+        return SellOperator(
+            jnp.asarray(sell.data), jnp.asarray(sell.cols),
+            jnp.asarray(sell.slice_offsets), jnp.asarray(sell.slice_k),
+            jnp.asarray(sell.row_positions()), sell.c, sell.k_max,
+            sell.n_rows)
+
+    def matvec(self, x: jax.Array) -> jax.Array:
+        y = kops.spmv_sell(self.data, self.cols, self.slice_offsets,
+                           self.slice_k, x, c=self.c, k_max=self.k_max)
+        return y[self.positions]
+
+
+def load_sell(name: str, c: int = 32, sigma: int = 256) -> SellOperator:
+    """Dataset as a device SELL-C-σ operator."""
+    return SellOperator.from_matrix(load_matrix(name).to_sell(c=c, sigma=sigma))
 
 
 # -- execution tiers -------------------------------------------------------------
@@ -93,11 +131,8 @@ def run_host_loop(data, cols, b, iters: int):
     return state[0], state[3]
 
 
-def run_device_loop(data, cols, b, iters: int, *,
-                    sync_every: Optional[int] = None,
-                    tol: Optional[float] = None):
+def _device_loop(step, b, iters, sync_every, tol):
     state = (jnp.zeros_like(b), b, b, jnp.vdot(b, b))
-    step = functools.partial(kref.cg_iteration, data=data, cols=cols)
     on_sync = None
     if tol is not None:
         thresh = tol * float(jnp.vdot(b, b))
@@ -106,6 +141,31 @@ def run_device_loop(data, cols, b, iters: int, *,
         step, iters, perks.PerksConfig(sync_every=sync_every), on_sync=on_sync)
     state = runner(state)
     return state[0], state[3]
+
+
+def run_device_loop(data, cols, b, iters: int, *,
+                    sync_every: Optional[int] = None,
+                    tol: Optional[float] = None):
+    step = functools.partial(kref.cg_iteration, data=data, cols=cols)
+    return _device_loop(step, b, iters, sync_every, tol)
+
+
+def run_device_loop_sell(op: SellOperator, b, iters: int, *,
+                         sync_every: Optional[int] = None,
+                         tol: Optional[float] = None):
+    """PERKS device-loop CG with the SELL-C-σ SpMV kernel — the
+    irregular-matrix path (per-slice K instead of global-K ELL padding)."""
+    step = lambda s: kref.cg_iteration_matvec(s, op.matvec)
+    return _device_loop(step, b, iters, sync_every, tol)
+
+
+def fused_block_rows(n: int, cap: int = 512) -> int:
+    """Largest power-of-two block size <= cap dividing n — the fused VEC
+    kernel streams whole row blocks, so ``block_rows`` must divide n."""
+    bm = 1
+    while bm * 2 <= cap and n % (bm * 2) == 0:
+        bm *= 2
+    return bm
 
 
 def run_fused(data, cols, b, iters: int, *, policy: str = "MIX",
@@ -117,11 +177,27 @@ def run_fused(data, cols, b, iters: int, *, policy: str = "MIX",
     return x, rr[0]
 
 
-def plan_policy(n_rows: int, nnz: int, dtype_bytes: int = 4, *,
-                chip: Chip = TPU_V5E) -> dict:
-    """Which Fig.-9 policy the cache planner selects for this problem."""
-    plan = plan_caching(cg_arrays(n_rows, nnz, dtype_bytes),
-                        int(chip.onchip_bytes * 0.9))
+def plan_policy(n_rows: Optional[int] = None, nnz: Optional[int] = None,
+                dtype_bytes: int = 4, *, chip: Chip = TPU_V5E,
+                matrix=None, budget_bytes: Optional[int] = None) -> dict:
+    """Which Fig.-9 policy the cache planner selects for this problem.
+
+    Pass either ``(n_rows, nnz)`` or ``matrix=`` (any ``repro.sparse``
+    container — the planner then ranks A by its **true** nnz, so a badly
+    padded layout cannot distort the VEC/MAT/MIX decision; padding is
+    fixed by choosing the format, not by caching less). ``budget_bytes``
+    overrides the chip's VMEM budget — e.g. the scaled proxy capacity
+    (``repro.sparse.generate.PROXY_ONCHIP_BYTES``) the registry datasets
+    straddle the way Fig. 7's suite straddles L2.
+    """
+    if matrix is not None:
+        arrays = cg_arrays_for(matrix)
+        n_rows = matrix.shape[0]
+    else:
+        arrays = cg_arrays(n_rows, nnz, dtype_bytes)
+    budget = (int(chip.onchip_bytes * 0.9) if budget_bytes is None
+              else int(budget_bytes))
+    plan = plan_caching(arrays, budget)
     vec_frac = min(plan.fraction_of(n) for n in ("r", "p", "x", "Ap"))
     mat_frac = plan.fraction_of("A")
     if vec_frac < 1.0:
@@ -140,7 +216,8 @@ def plan_policy(n_rows: int, nnz: int, dtype_bytes: int = 4, *,
 # -- distributed CG ---------------------------------------------------------------
 
 def run_distributed(data, cols, b, iters: int, mesh: Mesh, *,
-                    axis: str = "data", fuse_reductions: bool = False):
+                    axis: str = "data", fuse_reductions: bool = False,
+                    partition: str = "rows"):
     """Row-partitioned CG: local SpMV gathers the global p (all-gather),
     dot products psum — the collective IS the paper's device barrier.
 
@@ -161,7 +238,26 @@ def run_distributed(data, cols, b, iters: int, mesh: Mesh, *,
     along in the same psum: the estimate's error is then one step deep
     and stays *relative* to the residual scale. Tests bound the drift vs
     textbook CG.
+
+    ``partition="nnz"`` repacks the rows into nnz-balanced equal-shaped
+    shards (``repro.sparse.partition.shard_by_nnz``) before sharding, so
+    the per-iteration barrier waits for equal SpMV work instead of equal
+    row counts — on a power-law graph naive equal-rows sharding leaves
+    one shard with most of the nonzeros. Padded rows are algebraically
+    invisible (zero data/rhs); the result is gathered back to original
+    row order.
     """
+    if partition == "nnz":
+        parts = mesh.shape[axis]
+        sh = shard_by_nnz(np.asarray(data), np.asarray(cols),
+                          np.asarray(b), parts)
+        x_pad, rr = run_distributed(
+            jnp.asarray(sh.data), jnp.asarray(sh.cols), jnp.asarray(sh.b),
+            iters, mesh, axis=axis, fuse_reductions=fuse_reductions)
+        return x_pad[jnp.asarray(sh.pos)], rr
+    if partition != "rows":
+        raise ValueError(f"partition must be 'rows' or 'nnz', got "
+                         f"{partition!r}")
     n = b.shape[0]
 
     def step(state):

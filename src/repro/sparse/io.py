@@ -1,0 +1,123 @@
+"""Matrix Market (.mtx) read/write — no scipy dependency.
+
+Supports the ``matrix coordinate`` container with ``real`` / ``double`` /
+``integer`` / ``pattern`` fields and ``general`` / ``symmetric`` /
+``skew-symmetric`` symmetry, which covers the SPD SuiteSparse slice the
+CG evaluation draws from (paper §V-C). ``array`` (dense) and ``complex``
+files raise with a clear message. Symmetric files store only the lower
+triangle; ``read_mtx`` expands it (the *symmetric-expansion* the real
+SuiteSparse loaders perform), so the returned operator is the full
+matrix the solver multiplies by.
+"""
+from __future__ import annotations
+
+import os
+from typing import IO, Union
+
+import numpy as np
+
+from repro.sparse.formats import COOMatrix, CSRMatrix
+
+_FIELDS = ("real", "double", "integer", "pattern")
+_SYMMETRIES = ("general", "symmetric", "skew-symmetric")
+
+
+def _open(path_or_file: Union[str, os.PathLike, IO], mode: str):
+    if hasattr(path_or_file, "read") or hasattr(path_or_file, "write"):
+        return path_or_file, False
+    return open(path_or_file, mode), True
+
+
+def read_mtx(path_or_file, dtype=np.float32) -> COOMatrix:
+    """Parse a Matrix Market coordinate file into a COOMatrix.
+
+    Symmetric (skew-symmetric) entries are expanded to both triangles
+    (with negation for skew); ``pattern`` entries get value 1.
+    """
+    f, close = _open(path_or_file, "r")
+    try:
+        header = f.readline().strip().split()
+        if (len(header) < 5 or header[0] != "%%MatrixMarket"
+                or header[1].lower() != "matrix"):
+            raise ValueError(f"not a MatrixMarket matrix file: {header}")
+        layout, field, symmetry = (h.lower() for h in header[2:5])
+        if layout != "coordinate":
+            raise ValueError(f"only 'coordinate' layout supported, got "
+                             f"'{layout}' (dense 'array' files: densify "
+                             f"upstream)")
+        if field not in _FIELDS:
+            raise ValueError(f"unsupported field '{field}' (supported: "
+                             f"{_FIELDS})")
+        if symmetry not in _SYMMETRIES:
+            raise ValueError(f"unsupported symmetry '{symmetry}' "
+                             f"(supported: {_SYMMETRIES})")
+        line = f.readline()
+        while line and line.lstrip().startswith("%"):
+            line = f.readline()
+        n_rows, n_cols, nnz = (int(t) for t in line.split())
+        rows = np.empty(nnz, np.int64)
+        cols = np.empty(nnz, np.int64)
+        vals = np.ones(nnz, dtype)
+        pattern = field == "pattern"
+        got = 0
+        for line in f:
+            line = line.strip()
+            if not line or line.startswith("%"):
+                continue
+            parts = line.split()
+            rows[got] = int(parts[0]) - 1          # 1-based on disk
+            cols[got] = int(parts[1]) - 1
+            if not pattern:
+                vals[got] = float(parts[2])
+            got += 1
+        if got != nnz:
+            raise ValueError(f"header promised {nnz} entries, file has {got}")
+    finally:
+        if close:
+            f.close()
+    if symmetry != "general":
+        off = rows != cols
+        sign = -1.0 if symmetry == "skew-symmetric" else 1.0
+        rows = np.concatenate([rows, cols[off]])
+        cols = np.concatenate([cols, rows[:nnz][off]])
+        vals = np.concatenate([vals, sign * vals[off]]).astype(dtype)
+    return COOMatrix(rows, cols, vals, (n_rows, n_cols))
+
+
+def read_mtx_csr(path_or_file, dtype=np.float32) -> CSRMatrix:
+    """``read_mtx`` then canonicalize to CSR (duplicates summed)."""
+    return read_mtx(path_or_file, dtype=dtype).to_csr()
+
+
+def write_mtx(path_or_file, mat, *, symmetric: Union[bool, str] = "auto",
+              comment: str = "") -> None:
+    """Write a COO/CSR matrix as ``matrix coordinate real``.
+
+    ``symmetric="auto"`` detects symmetry and stores only the lower
+    triangle when it holds (halving the file, as SuiteSparse does);
+    pass ``False`` to force ``general`` or ``True`` to assert symmetry.
+    """
+    csr = mat.to_csr() if isinstance(mat, COOMatrix) else mat
+    if not isinstance(csr, CSRMatrix):
+        raise TypeError(f"expected COOMatrix or CSRMatrix, got {type(mat)}")
+    if symmetric == "auto":
+        symmetric = csr.shape[0] == csr.shape[1] and csr.is_symmetric()
+    elif symmetric and not csr.is_symmetric():
+        raise ValueError("symmetric=True but the matrix is not symmetric")
+    coo = csr.to_coo()
+    rows, cols, vals = coo.rows, coo.cols, coo.data
+    if symmetric:
+        keep = rows >= cols
+        rows, cols, vals = rows[keep], cols[keep], vals[keep]
+    f, close = _open(path_or_file, "w")
+    try:
+        kind = "symmetric" if symmetric else "general"
+        f.write(f"%%MatrixMarket matrix coordinate real {kind}\n")
+        for line in comment.splitlines():
+            f.write(f"% {line}\n")
+        f.write(f"{csr.shape[0]} {csr.shape[1]} {len(vals)}\n")
+        for r, c, v in zip(rows, cols, vals):
+            f.write(f"{int(r) + 1} {int(c) + 1} {float(v):.9g}\n")
+    finally:
+        if close:
+            f.close()

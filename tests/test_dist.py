@@ -41,6 +41,36 @@ def test_distributed_cg_matches_single(dist_run):
     assert res["err"] < 1e-3 and res["rr_rel"] < 1e-3
 
 
+def test_distributed_cg_nnz_partition(dist_run):
+    """nnz-balanced sharding (repro.sparse.partition) is algebraically
+    invisible: same solution as equal-rows on an irregular matrix whose
+    naive shards would be badly imbalanced."""
+    res = dist_run("""
+        import json, jax, jax.numpy as jnp, numpy as np
+        from repro.solvers import cg
+        from repro.kernels import ref
+        from repro.dist.mesh import make_mesh
+        from repro.sparse import balance_report, nnz_balanced_partition
+        mesh = make_mesh((8,), ("data",))
+        csr = cg.load_matrix("graph_powerlaw_8k")
+        ell = csr.to_ell()
+        data, cols = jnp.asarray(ell.data), jnp.asarray(ell.cols)
+        b = jax.random.normal(jax.random.key(1), (csr.shape[0],), jnp.float32)
+        x_n, rr_n = cg.run_distributed(data, cols, b, 8, mesh,
+                                       partition="nnz")
+        x_s, rr_s = ref.cg_run(data, cols, b, 8)
+        bounds = nnz_balanced_partition(csr.row_nnz, 8)
+        eq = np.linspace(0, csr.shape[0], 9).astype(np.int64)
+        print(json.dumps({
+            "err": float(jnp.abs(x_n - x_s).max() / jnp.abs(x_s).max()),
+            "rr_rel": float(abs(rr_n - rr_s) / rr_s),
+            "imb_nnz": balance_report(bounds, csr.row_nnz)["imbalance"],
+            "imb_rows": balance_report(eq, csr.row_nnz)["imbalance"]}))
+    """, timeout=600)
+    assert res["err"] < 1e-3 and res["rr_rel"] < 1e-3
+    assert res["imb_nnz"] < 1.1 < res["imb_rows"]
+
+
 def test_sharded_flash_decode_matches_ref(dist_run):
     res = dist_run("""
         import json, jax, jax.numpy as jnp
