@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.util import time_fn, row
+from repro.core.hardware import TPU_V5E
 from repro.solvers import cg as cgs
 from repro.sparse import REGISTRY, irregular_names
 from repro.sparse.generate import PROXY_ONCHIP_BYTES
@@ -32,7 +33,7 @@ from repro.sparse.generate import PROXY_ONCHIP_BYTES
 ITERS = 24
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, chip=TPU_V5E):
     names = list(REGISTRY)
     fmt_names = irregular_names()
     if quick:
@@ -67,7 +68,7 @@ def run(quick: bool = False):
         t_mix, _ = time_fn(lambda: cgs.run_fused(data, cols, b, iters,
                                                  policy="MIX", block_rows=bm),
                            warmup=1, iters=3)
-        plan = cgs.plan_policy(matrix=csr)
+        plan = cgs.plan_policy(matrix=csr, chip=chip)
         regime = cgs.plan_policy(matrix=csr,
                                  budget_bytes=PROXY_ONCHIP_BYTES)["policy"]
         meas = t_host / t_imp
@@ -119,7 +120,7 @@ def run(quick: bool = False):
                             warmup=1, iters=3)
         t_dev, _ = time_fn(lambda: cgs.run_device_loop(data, cols, b, iters),
                            warmup=1, iters=3)
-        plan = cgs.plan_policy(n, n * k)
+        plan = cgs.plan_policy(n, n * k, chip=chip)
         meas = t_host / t_dev
         speedups.append(meas)
         row(f"cg_{name}", t_dev / iters * 1e6,

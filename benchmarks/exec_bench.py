@@ -1,0 +1,71 @@
+"""``exec_plan_*`` rows: the unified executor's planner vs reality.
+
+For one stencil problem and one CG problem, ``repro.exec.autotune``
+measures the planner's top candidates and the rows report, per
+candidate, the planner-*predicted* time next to the *measured* time
+(CPU interpret mode — the ranking, not the absolute ratio, is the
+signal) plus which candidate the planner ranked first and which one
+actually won. The measured winners' Plans are written as one JSON
+artifact keyed by problem name (``REPRO_PLAN_JSON`` env; CI uploads it
+per commit), exercising the Plan round-trip on every bench run.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.util import row
+from repro.core.hardware import TPU_V5E
+from repro.exec import CGProblem, Plan, StencilProblem, autotune
+from repro.kernels.common import get_spec
+from repro.solvers.cg import load_dataset
+
+
+def _report(section: str, result, n_steps: int, chip_name: str):
+    for rank, tr in enumerate(result.table):
+        p = tr.plan
+        pred_us = (p.predicted_s or 0.0) / n_steps * 1e6
+        tag = f"{p.tier}" + (f"_t{p.fuse_steps}" if p.fuse_steps > 1 else "")
+        if p.policy:
+            tag += f"_{p.policy.lower()}"
+        row(f"exec_plan_{section}_{tag}", tr.measured_s / n_steps * 1e6,
+            f"predicted_us={pred_us:.3f};planner_rank={rank};"
+            f"chosen={int(p == result.best)};cached_bytes={p.cached_bytes};"
+            f"chip={chip_name}")
+
+
+def run(quick: bool = True, chip=TPU_V5E, plan_json: str | None = None):
+    plan_json = plan_json if plan_json is not None else \
+        os.environ.get("REPRO_PLAN_JSON", "")
+    steps = 8
+
+    names = ["2d5pt"] if quick else ["2d5pt", "3d7pt"]
+    winners: dict[str, Plan] = {}
+    for name in names:
+        spec = get_spec(name)
+        shape = (48, 64) if spec.ndim == 2 else (24, 16, 32)
+        x = jax.random.normal(jax.random.key(0), shape, jnp.float32)
+        problem = StencilProblem(x, spec, steps)
+        res = autotune(problem, chip=chip, top_k=4, warmup=1, iters=3)
+        _report(f"stencil_{name}", res, steps, chip.name)
+        winners[f"stencil_{name}"] = res.best
+
+    data, cols = load_dataset("poisson_64")
+    b = jax.random.normal(jax.random.key(1), (data.shape[0],), jnp.float32)
+    problem = CGProblem.from_ell(data, cols, b, steps)
+    res = autotune(problem, chip=chip, top_k=4, warmup=1, iters=3)
+    _report("cg_poisson_64", res, steps, chip.name)
+    winners["cg_poisson_64"] = res.best
+
+    if plan_json:
+        with open(plan_json, "w") as f:
+            json.dump({k: p.to_dict() for k, p in winners.items()}, f,
+                      indent=2)
+        # round-trip sanity: every winner must reload to the same Plan
+        with open(plan_json) as f:
+            loaded = json.load(f)
+        assert {k: Plan.from_dict(d) for k, d in loaded.items()} == winners
+    return winners

@@ -23,16 +23,16 @@ from repro.kernels.common import get_spec
 from repro.kernels.stencil3d import plan_resident_planes
 
 
-def run_where(domain=(4096, 4096), steps=1000):
+def run_where(domain=(4096, 4096), steps=1000, chip=TPU_V5E):
     """Fig. 8 analog: resident fraction sweep for a 2d5pt-like stencil."""
     spec = get_spec("2d5pt")
     cells = int(np.prod(domain))
-    base = project_host_loop(TPU_V5E, n_steps=steps, domain_cells=cells,
+    base = project_host_loop(chip, n_steps=steps, domain_cells=cells,
                              dtype_bytes=4)
     for frac in (0.0, 0.25, 0.5, 0.75, 1.0):
         cached = int(cells * frac)
         halo = 2 * spec.radius * domain[1] * 4 if frac < 1.0 else 0
-        p = project_perks(TPU_V5E, n_steps=steps, domain_cells=cells,
+        p = project_perks(chip, n_steps=steps, domain_cells=cells,
                           dtype_bytes=4, cached_cells=cached,
                           halo_bytes_per_step=halo)
         row(f"where_cache_frac_{int(frac * 100):03d}",
@@ -41,12 +41,12 @@ def run_where(domain=(4096, 4096), steps=1000):
             f"bound={p.bound}")
 
 
-def run_what():
+def run_what(chip=TPU_V5E):
     """Fig. 9 analog: CG policies x problem sizes (planner projections)."""
     for name, n, nnz in (("small", 20_000, 100_000),
                          ("mid", 400_000, 4_000_000),
                          ("large", 4_000_000, 60_000_000)):
-        budget = int(TPU_V5E.onchip_bytes * 0.9)
+        budget = int(chip.onchip_bytes * 0.9)
         plan = plan_caching(cg_arrays(n, nnz, 4), budget)
         per_iter_traffic = 4 * n * 4 * 2.25 + nnz * 8
         row(f"what_cache_{name}", 0.0,
@@ -55,11 +55,12 @@ def run_what():
             f";saved_frac={plan.traffic_saved_per_step / per_iter_traffic:.2f}")
 
 
-def run_concurrency(domain=(8192, 8192)):
+def run_concurrency(domain=(8192, 8192), chip=TPU_V5E):
     """Table II analog: streaming working set vs resident capacity."""
     spec = get_spec("2d5pt")
     for sub_rows in (512, 256, 128, 64, 32):
-        planes = plan_resident_planes(domain, 4, spec, sub_rows=sub_rows)
+        planes = plan_resident_planes(domain, 4, spec, chip=chip,
+                                      sub_rows=sub_rows)
         working = (2 * (sub_rows + 2 * spec.radius) + 2 * spec.radius) \
             * domain[1] * 4
         cached_frac = planes / domain[0]

@@ -13,16 +13,24 @@ Prints ``name,us_per_call,derived`` CSV rows:
   where_cache_*     Fig. 8  (where/how much to cache sweep)
   what_cache_*      Fig. 9  (what to cache: CG policy matrix)
   concurrency_*     Table II (occupancy/working-set analog)
+  exec_plan_*       beyond-paper: unified-executor autotune — planner-
+                    predicted vs measured time per candidate Plan
+                    (DESIGN.md §7); the chosen Plan JSON lands in
+                    $REPRO_PLAN_JSON when set
   decode_*          beyond-paper: persistent LM decode vs host loop
   train_fused_*     beyond-paper: K optimizer steps per dispatch
   roofline_*        §Roofline cells from the dry-run artifacts (if present)
 
 Use REPRO_BENCH_FULL=1 for the full sweep (default trims to keep the run
-a few minutes on one CPU core). The CSV schema and the full bench-section
-<-> paper-figure mapping are documented in docs/BENCHMARKS.md.
+a few minutes on one CPU core). ``--sections stencil,cg`` (or env
+REPRO_BENCH_SECTIONS) runs a subset; ``--chip tpu_v5p`` re-projects the
+model-derived columns for another chip (core/hardware.py CHIPS). The CSV
+schema and the full bench-section <-> paper-figure mapping are
+documented in docs/BENCHMARKS.md.
 """
 from __future__ import annotations
 
+import argparse
 import os
 import sys
 
@@ -30,35 +38,79 @@ import sys
 # the former puts benchmarks/ (not the repo root) on sys.path.
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
+SECTIONS = ("stencil", "fuse", "cg", "policy", "exec", "decode", "train",
+            "roofline")
 
-def main() -> None:
+
+def _parse_sections(text: str) -> set[str]:
+    if not text:
+        return set(SECTIONS)
+    picked = {s.strip() for s in text.split(",") if s.strip()}
+    unknown = picked - set(SECTIONS)
+    if unknown:
+        raise SystemExit(f"unknown sections {sorted(unknown)}; "
+                         f"choose from {','.join(SECTIONS)}")
+    return picked
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--sections", default=os.environ.get(
+        "REPRO_BENCH_SECTIONS", ""),
+        help=f"comma-separated subset of {','.join(SECTIONS)} "
+             "(default: all; env REPRO_BENCH_SECTIONS)")
+    ap.add_argument("--chip", default="tpu_v5e",
+                    help="chip for model-projected columns "
+                         "(core/hardware.py CHIPS)")
+    args = ap.parse_args(argv)
+    sections = _parse_sections(args.sections)
+
     quick = os.environ.get("REPRO_BENCH_FULL", "0") != "1"
     from benchmarks import stencil_bench, cg_bench, policy_bench, decode_bench
-    from benchmarks import train_bench
+    from benchmarks import exec_bench, train_bench
     from benchmarks.util import row
+    from repro.core.hardware import CHIPS
+
+    if args.chip not in CHIPS:
+        raise SystemExit(f"unknown chip {args.chip!r}; "
+                         f"choose from {sorted(CHIPS)}")
+    chip = CHIPS[args.chip]
 
     print("name,us_per_call,derived")
-    gm_large = stencil_bench.run("large", quick=quick)
-    gm_small = stencil_bench.run("small", quick=quick)
-    stencil_bench.run_fused(quick=quick)
-    gm_cg = cg_bench.run(quick=quick)
-    policy_bench.run_where()
-    policy_bench.run_what()
-    policy_bench.run_concurrency()
-    gm_dec = decode_bench.run(archs=("qwen2-0.5b", "mamba2-780m") if quick
-                              else ("qwen2-0.5b", "h2o-danube-1.8b",
-                                    "mamba2-780m", "zamba2-1.2b"))
-    train_bench.run(quick=quick)
+    geomeans = {}
+    if "stencil" in sections:
+        geomeans["stencil_large"] = stencil_bench.run("large", quick=quick,
+                                                      chip=chip)
+        geomeans["stencil_small"] = stencil_bench.run("small", quick=quick,
+                                                      chip=chip)
+    if "fuse" in sections:
+        stencil_bench.run_fused(quick=quick)
+    if "cg" in sections:
+        geomeans["cg"] = cg_bench.run(quick=quick, chip=chip)
+    if "policy" in sections:
+        policy_bench.run_where(chip=chip)
+        policy_bench.run_what(chip=chip)
+        policy_bench.run_concurrency(chip=chip)
+    if "exec" in sections:
+        exec_bench.run(quick=quick, chip=chip)
+    if "decode" in sections:
+        geomeans["decode"] = decode_bench.run(
+            archs=("qwen2-0.5b", "mamba2-780m") if quick
+            else ("qwen2-0.5b", "h2o-danube-1.8b",
+                  "mamba2-780m", "zamba2-1.2b"))
+    if "train" in sections:
+        train_bench.run(quick=quick)
 
-    try:
-        from benchmarks import roofline
-        roofline.csv_rows("single")
-    except Exception as e:  # dry-run artifacts may not exist yet
-        row("roofline_missing", 0.0, f"run launch.dryrun first ({e})")
+    if "roofline" in sections:
+        try:
+            from benchmarks import roofline
+            roofline.csv_rows("single")
+        except Exception as e:  # dry-run artifacts may not exist yet
+            row("roofline_missing", 0.0, f"run launch.dryrun first ({e})")
 
-    row("summary_geomeans", 0.0,
-        f"stencil_large={gm_large:.2f}x;stencil_small={gm_small:.2f}x;"
-        f"cg={gm_cg:.2f}x;decode={gm_dec:.2f}x")
+    if geomeans:
+        row("summary_geomeans", 0.0,
+            ";".join(f"{k}={v:.2f}x" for k, v in geomeans.items()))
 
 
 if __name__ == "__main__":

@@ -30,15 +30,15 @@ PROJ = {
 STEPS = 50
 
 
-def projected(spec, domain, steps=1000):
+def projected(spec, domain, steps=1000, chip=TPU_V5E):
     cells = int(np.prod(domain))
-    planes = plan_resident_planes(domain, 4, spec)
+    planes = plan_resident_planes(domain, 4, spec, chip=chip)
     row_cells = int(np.prod(domain[1:]))
     cached = planes * row_cells
     halo = 2 * spec.radius * row_cells * 4  # boundary rows traffic per step
-    base = project_host_loop(TPU_V5E, n_steps=steps, domain_cells=cells,
+    base = project_host_loop(chip, n_steps=steps, domain_cells=cells,
                              dtype_bytes=4)
-    perks = project_perks(TPU_V5E, n_steps=steps, domain_cells=cells,
+    perks = project_perks(chip, n_steps=steps, domain_cells=cells,
                           dtype_bytes=4, cached_cells=cached,
                           halo_bytes_per_step=halo if cached < cells else 0)
     return cached / cells, base.t_total / perks.t_total, perks
@@ -74,7 +74,7 @@ def run_fused(quick: bool = False):
                 f"interp_speedup={base_us / tf:.2f}x")
 
 
-def run(domain_kind: str = "large", quick: bool = False):
+def run(domain_kind: str = "large", quick: bool = False, chip=TPU_V5E):
     names = list(BENCHMARKS)
     if quick:
         names = ["2d5pt", "2d9pt", "2ds25pt", "3d7pt", "poisson"]
@@ -85,7 +85,7 @@ def run(domain_kind: str = "large", quick: bool = False):
         t_host, _ = time_fn(lambda: ssol.run_host_loop(x, spec, STEPS))
         t_dev, _ = time_fn(lambda: ssol.run_device_loop(x, spec, STEPS))
         frac, proj_speedup, perks = projected(
-            spec, PROJ[domain_kind][spec.ndim])
+            spec, PROJ[domain_kind][spec.ndim], chip=chip)
         meas = t_host / t_dev
         speedups.append(meas)
         row(f"stencil_{domain_kind}_{name}",

@@ -15,6 +15,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.exec import CGProblem, Plan, execute
 from repro.solvers import cg
 from repro.sparse import REGISTRY, choose_format
 from repro.sparse.generate import PROXY_ONCHIP_BYTES
@@ -57,20 +58,27 @@ def main():
     b = jax.random.normal(jax.random.key(0), (n,), jnp.float32)
     bb = float(jnp.vdot(b, b))
 
+    # one problem, three plans — the unified executor (DESIGN.md §7).
+    # tol only on the device-loop problem: the chunked loop is the tier
+    # with host-sync points to evaluate the convergence check at.
+    problem = CGProblem.from_ell(data, cols, b, iters, matrix=csr)
+    problem_tol = CGProblem.from_ell(data, cols, b, iters, matrix=csr,
+                                     tol=1e-12)
+
     t0 = time.perf_counter()
-    x_h, rr_h = cg.run_host_loop(data, cols, b, iters)
+    x_h, rr_h = execute(problem, Plan(tier="host_loop"))
     jax.block_until_ready(x_h)
     t_h = time.perf_counter() - t0
 
     t0 = time.perf_counter()
-    x_d, rr_d = cg.run_device_loop(data, cols, b, iters, sync_every=20,
-                                   tol=1e-12)
+    x_d, rr_d = execute(problem_tol, Plan(tier="device_loop", sync_every=20))
     jax.block_until_ready(x_d)
     t_d = time.perf_counter() - t0
 
-    x_f, rr_f = cg.run_fused(data, cols, b, iters, policy=plan["policy"]
-                             if plan["policy"] in ("VEC", "MIX") else "MIX",
-                             block_rows=cg.fused_block_rows(n))
+    x_f, rr_f = execute(problem, Plan(
+        tier="resident",
+        policy=plan["policy"] if plan["policy"] in ("VEC", "MIX") else "MIX",
+        block_rows=cg.fused_block_rows(n)))
 
     print(f"CG {args.dataset} (n={n}), {iters} iters (|b|^2 = {bb:.1f})")
     print(f"  host loop      : {t_h * 1e3:7.1f} ms, "
@@ -81,8 +89,9 @@ def main():
           f"(whole loop in one Pallas kernel, vectors VMEM-resident)")
     if fmt == "sell":
         op = cg.SellOperator.from_matrix(csr.to_sell(c=32, sigma=256))
+        sell_problem = CGProblem.from_matvec(op.matvec, b, iters, matrix=csr)
         t0 = time.perf_counter()
-        x_s, rr_s = cg.run_device_loop_sell(op, b, iters)
+        x_s, rr_s = execute(sell_problem, Plan(tier="device_loop"))
         jax.block_until_ready(x_s)
         t_s = time.perf_counter() - t0
         print(f"  SELL-C-σ loop  : {t_s * 1e3:7.1f} ms, "

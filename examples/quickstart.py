@@ -1,71 +1,93 @@
-"""Quickstart: run an iterative 2D stencil under the PERKS execution model.
+"""Quickstart: the unified PERKS executor (DESIGN.md §7).
 
     PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py --chip tpu_v5p
+    PYTHONPATH=src python examples/quickstart.py --spec 3d7pt --steps 20
 
-Shows the three execution tiers (host loop / PERKS device loop / PERKS
-resident Pallas kernel) computing identical results, the cache plan the
-policy picks, and the paper-model projection for TPU v5e.
+One pipeline behind every solver:
+
+    problem  = StencilProblem(x, spec, steps)      # describe the workload
+    cands    = plan_candidates(problem, chip=...)  # rank tiers x fuse depths
+    result   = execute(problem, cands[0])          # one dispatch path
+    tuned    = autotune(problem, ...)              # measure top-k, pick winner
+
+``--chip`` swaps the planner's hardware model (TPU v4 / v5e / v5p from
+``core/hardware.py``) — watch the cache assignment and the projected
+speedup move with on-chip capacity and HBM bandwidth.
 """
-import time
+import argparse
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.hardware import TPU_V5E
-from repro.core.perf_model import project_host_loop, project_perks
-from repro.kernels.common import get_spec
-from repro.solvers import stencil
-
-SPEC = get_spec("2d9pt")
-STEPS = 50
+from repro.core.hardware import CHIPS
+from repro.core.perf_model import project_host_loop
+from repro.exec import StencilProblem, autotune, execute, plan, plan_candidates
+from repro.kernels import ref
+from repro.kernels.common import BENCHMARKS, get_spec
 
 
 def main():
-    x = jax.random.normal(jax.random.key(0), (96, 128), jnp.float32)
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--chip", default="tpu_v5e", choices=sorted(CHIPS),
+                    help="hardware model the planner prices plans with")
+    ap.add_argument("--spec", default="2d9pt", choices=sorted(BENCHMARKS))
+    ap.add_argument("--steps", type=int, default=50)
+    args = ap.parse_args()
+    chip = CHIPS[args.chip]
+    spec = get_spec(args.spec)
 
-    # warm both paths (compile outside the timed region)
-    jax.block_until_ready(stencil.run_host_loop(x, SPEC, STEPS))
-    jax.block_until_ready(stencil.run_device_loop(x, SPEC, STEPS))
+    shape = (96, 128) if spec.ndim == 2 else (24, 24, 48)
+    x = jax.random.normal(jax.random.key(0), shape, jnp.float32)
+    problem = StencilProblem(x, spec, args.steps)
 
-    t0 = time.perf_counter()
-    y_host = stencil.run_host_loop(x, SPEC, STEPS)
-    jax.block_until_ready(y_host)
-    t_host = time.perf_counter() - t0
+    # 1. the planner: every candidate Plan, ranked by projected time
+    cands = plan_candidates(problem, chip=chip)
+    print(f"candidate plans for {problem.name} on {chip.name} "
+          f"({args.steps} steps on {shape}):")
+    for c in cands:
+        cached = f"cached_rows={c.cached_rows}" if c.cached_rows is not None \
+            else f"cached_bytes={c.cached_bytes}"
+        print(f"  {c.tier:12s} fuse={c.fuse_steps}  {cached:18s} "
+              f"barriers={c.barriers:4d}  projected={c.predicted_s * 1e6:9.2f} us"
+              f"  ({c.predicted_bound})")
 
-    t0 = time.perf_counter()
-    y_perks = stencil.run_device_loop(x, SPEC, STEPS)
-    jax.block_until_ready(y_perks)
-    t_perks = time.perf_counter() - t0
+    # 2. the executor: one dispatch path for every tier — same results
+    oracle = ref.stencil_run(x, spec, args.steps)
+    for tier in ("host_loop", "device_loop", "resident"):
+        p = next(c for c in cands if c.tier == tier)
+        y = execute(problem, p)
+        print(f"  execute({tier:12s}) max|err vs oracle| = "
+              f"{float(jnp.abs(y - oracle).max()):.2e}")
 
-    y_resident = stencil.run_resident(x, SPEC, STEPS, cached_rows=48,
-                                      sub_rows=16)
+    # 3. autotune: measure the planner's top candidates, pick the winner
+    res = autotune(problem, chip=chip, top_k=3, warmup=1, iters=3)
+    print("\nautotune (measured on this host):")
+    for i, tr in enumerate(res.table):
+        mark = " <- winner" if tr.plan == res.best else ""
+        print(f"  rank {i}: {tr.plan.tier:12s} fuse={tr.plan.fuse_steps} "
+              f"predicted={tr.predicted_s * 1e6:9.2f} us "
+              f"measured={tr.measured_s * 1e6:9.2f} us{mark}")
+    print("\nchosen Plan (JSON artifact — store it, replay it):")
+    print(res.best.to_json())
 
-    print(f"stencil {SPEC.name}: {STEPS} steps on {x.shape}")
-    print(f"  host loop   : {t_host * 1e3:7.1f} ms")
-    print(f"  PERKS fused : {t_perks * 1e3:7.1f} ms "
-          f"({t_host / t_perks:.2f}x)")
-    print(f"  max |host - perks|    = "
-          f"{float(jnp.abs(y_host - y_perks).max()):.2e}")
-    print(f"  max |host - resident| = "
-          f"{float(jnp.abs(y_host - y_resident).max()):.2e}")
-
-    # what the cache policy does at production scale
-    domain = (8192, 8192)
-    plan = stencil.plan_for(domain, 4, SPEC)
+    # 4. what the planner does at production scale on this chip
+    domain = (8192, 8192) if spec.ndim == 2 else (512, 512, 512)
+    big = StencilProblem(jax.ShapeDtypeStruct(domain, jnp.float32), spec, 1000)
+    # ShapeDtypeStruct carries shape/dtype — enough for planning (no data).
+    best = plan(big, chip=chip)
     cells = int(np.prod(domain))
-    base = project_host_loop(TPU_V5E, n_steps=1000, domain_cells=cells,
+    base = project_host_loop(chip, n_steps=1000, domain_cells=cells,
                              dtype_bytes=4)
-    perks = project_perks(TPU_V5E, n_steps=1000, domain_cells=cells,
-                          dtype_bytes=4,
-                          cached_cells=plan["cached_cells"],
-                          halo_bytes_per_step=2 * SPEC.radius * domain[1] * 4)
-    print(f"\nTPU v5e projection for {domain} f32, 1000 steps:")
-    print(f"  VMEM-resident rows : {plan['cached_rows']} "
-          f"({plan['cached_fraction']:.0%} of domain)")
-    print(f"  host-loop bound    : {base.cells_per_s / 1e9:7.1f} GCells/s")
-    print(f"  PERKS bound        : {perks.cells_per_s / 1e9:7.1f} GCells/s "
-          f"({base.t_total / perks.t_total:.2f}x, {perks.bound}-bound)")
+    frac = (best.cached_rows or 0) * int(np.prod(domain[1:])) / cells
+    print(f"\n{chip.name} projection for {domain} f32, 1000 steps:")
+    print(f"  planner picks      : {best.tier} (fuse_steps={best.fuse_steps}, "
+          f"{best.cached_rows} VMEM-resident rows = {frac:.0%} of domain)")
+    print(f"  host-loop bound    : {base.t_total * 1e3:8.1f} ms")
+    print(f"  planned bound      : {best.predicted_s * 1e3:8.1f} ms "
+          f"({base.t_total / best.predicted_s:.2f}x, "
+          f"{best.predicted_bound}-bound)")
 
 
 if __name__ == "__main__":

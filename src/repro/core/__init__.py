@@ -32,4 +32,6 @@ from repro.core.perf_model import (
     roofline_from_analysis,
     parse_collectives,
 )
-from repro.core.hardware import Chip, TPU_V5E, A100, V100, CHIPS
+from repro.core.hardware import (
+    Chip, TPU_V5E, TPU_V4, TPU_V5P, A100, V100, CHIPS,
+)

@@ -49,6 +49,39 @@ TPU_V5E = Chip(
     ici_links=4,  # 2D torus on v5e: 4 links (+x,-x,+y,-y)
 )
 
+# Earlier/later TPU generations, for planner sensitivity studies (the
+# executor's `--chip` flag threads these through examples/ and
+# benchmarks/). Public specs:
+#   v4:  275 TFLOP/s bf16, 32 GiB HBM2 @ 1228 GB/s, 2400 Gbps ICI per chip
+#        over a 3D torus (6 links -> 50 GB/s/link)
+#        [cloud.google.com/tpu/docs/v4, TPU v4 ISCA'23 paper arXiv:2304.01433]
+#   v5p: 459 TFLOP/s bf16, 95 GiB HBM2e @ 2765 GB/s, 4800 Gbps ICI per chip
+#        over a 3D torus (6 links -> 100 GB/s/link)
+#        [cloud.google.com/tpu/docs/v5p]
+# VMEM is taken as 128 MiB per core for both (public Pallas/Mosaic guidance
+# quotes the same order as v5e); VMEM bandwidth scaled ~22x HBM like v5e.
+TPU_V4 = Chip(
+    name="tpu_v4",
+    peak_flops=275e12,
+    hbm_bw=1228e9,
+    hbm_bytes=32 * GiB,
+    onchip_bytes=128 * MiB,
+    onchip_bw=27e12,
+    ici_bw_per_link=50e9,
+    ici_links=6,  # 3D torus
+)
+
+TPU_V5P = Chip(
+    name="tpu_v5p",
+    peak_flops=459e12,
+    hbm_bw=2765e9,
+    hbm_bytes=95 * GiB,
+    onchip_bytes=128 * MiB,
+    onchip_bw=61e12,
+    ici_bw_per_link=100e9,
+    ici_links=6,  # 3D torus
+)
+
 # Paper Table I (used to sanity-check the reproduced performance model
 # against the paper's own worked examples in Section IV-B).
 A100 = Chip(
@@ -71,7 +104,7 @@ V100 = Chip(
     ici_bw_per_link=0.0,
 )
 
-CHIPS = {c.name: c for c in (TPU_V5E, A100, V100)}
+CHIPS = {c.name: c for c in (TPU_V5E, TPU_V4, TPU_V5P, A100, V100)}
 
 
 def vmem_cache_budget(chip: Chip, working_set_bytes: float) -> float:

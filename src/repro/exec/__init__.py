@@ -1,0 +1,51 @@
+"""repro.exec — the unified PERKS executor (DESIGN.md §7).
+
+One solver-agnostic pipeline behind every iterative workload:
+
+    Problem  ->  plan()/plan_candidates()  ->  execute()  ->  autotune()
+
+* :class:`Problem` (``problem.py``) — what a workload must expose: step
+  function, initial state, cacheable arrays, halo/partition spec, oracle.
+  Adapters for the paper's workloads live in ``adapters.py``
+  (:class:`StencilProblem`, :class:`CGProblem`).
+* :class:`Plan` (``plan.py``) — an immutable record of *how* to run
+  (tier, fuse depth, cache assignment, shard axis) with a JSON
+  round-trip, so chosen plans are loggable artifacts.
+* :func:`plan` (``planner.py``) — subsumes the five legacy planner entry
+  points; ranks candidates with the paper's performance model.
+* :func:`execute` / :func:`autotune` (``executor.py``) — the single
+  dispatch path over all tiers, and measured top-k plan selection.
+
+The legacy ``solvers/stencil.py`` and ``solvers/cg.py`` surfaces are
+thin deprecated shims over this package.
+"""
+from repro.exec.adapters import (
+    CGProblem,
+    StencilProblem,
+    fused_block_rows,
+    fusion_schedule,
+    make_distributed_step,
+)
+from repro.exec.executor import AutotuneResult, TimingRow, autotune, execute
+from repro.exec.plan import TIERS, CacheDecision, Plan
+from repro.exec.planner import plan, plan_candidates
+from repro.exec.problem import HaloSpec, Problem
+
+__all__ = [
+    "AutotuneResult",
+    "CGProblem",
+    "CacheDecision",
+    "HaloSpec",
+    "Plan",
+    "Problem",
+    "StencilProblem",
+    "TIERS",
+    "TimingRow",
+    "autotune",
+    "execute",
+    "fused_block_rows",
+    "fusion_schedule",
+    "make_distributed_step",
+    "plan",
+    "plan_candidates",
+]

@@ -1,0 +1,28 @@
+"""Warn-once plumbing for the legacy solver surfaces.
+
+Every legacy ``run_*`` entry point is now a shim over
+``repro.exec.execute``; each emits a single :class:`DeprecationWarning`
+per process pointing at its executor replacement (benchmarks call the
+shims thousands of times — one warning per entry point, not per call).
+``tests/test_exec.py`` asserts the exactly-once contract.
+"""
+from __future__ import annotations
+
+import warnings
+
+_WARNED: set[str] = set()
+
+
+def warn_once(entry: str, replacement: str) -> None:
+    """Emit one DeprecationWarning for ``entry`` per process."""
+    if entry in _WARNED:
+        return
+    _WARNED.add(entry)
+    warnings.warn(
+        f"{entry} is deprecated; use {replacement} — see repro.exec "
+        f"(DESIGN.md §7)", DeprecationWarning, stacklevel=3)
+
+
+def reset_warnings() -> None:
+    """Forget which entry points have warned (test isolation only)."""
+    _WARNED.clear()

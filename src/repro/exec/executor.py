@@ -1,0 +1,149 @@
+"""``execute(problem, plan)`` — the single dispatch path for every tier —
+and ``autotune``, which measures the planner's top candidates and returns
+the empirical winner with its timing table.
+
+The executor owns only *orchestration*: the loop combinators
+(``core.perks``) for the host/device tiers and the problem's own tier
+hooks for resident/distributed. All workload specifics live in the
+Problem adapters, all decisions in the Plan — which is what makes the
+legacy ``run_*`` surfaces one-line shims (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+import warnings
+from typing import Optional, Sequence
+
+import jax
+
+from repro.core import perks
+from repro.exec.plan import Plan
+from repro.exec.problem import Problem
+from repro.exec import planner as _planner
+
+
+def execute(problem: Problem, plan: Plan, *, mesh=None):
+    """Run ``problem`` under ``plan``; returns the problem's final result.
+
+    Reproduces the legacy ``run_*`` entry points exactly: for the same
+    plan the executor routes through the identical combinators/kernels,
+    so results are bit-identical (<= 2 ulp where ``fuse_steps > 1``
+    changes window shapes, DESIGN.md §4 — the same bound the legacy
+    paths carry).
+    """
+    if plan.n_steps and plan.n_steps != problem.n_steps:
+        raise ValueError(
+            f"plan.n_steps={plan.n_steps} != problem.n_steps="
+            f"{problem.n_steps}; plans are per-problem-instance")
+    if not problem.supports(plan.tier):
+        raise NotImplementedError(
+            f"{type(problem).__name__} does not support tier {plan.tier!r}")
+    on_sync = problem.on_sync()
+    if on_sync is not None and not _honors_on_sync(plan, problem.n_steps):
+        # The problem declared a convergence check (e.g. CGProblem.tol)
+        # but this plan has no host-sync points to evaluate it at — the
+        # run completes all n_steps. plan() sets sync_every on loop-tier
+        # CG candidates automatically; hand-built plans must opt in.
+        warnings.warn(
+            f"{problem.name} declares a convergence check but the "
+            f"{plan.tier} plan has no host-sync points (sync_every="
+            f"{plan.sync_every}); running all {problem.n_steps} steps",
+            RuntimeWarning, stacklevel=2)
+    if plan.tier == "distributed":
+        if mesh is None:
+            raise ValueError("distributed plan needs mesh=")
+        return problem.run_distributed(plan, mesh)
+    if plan.tier == "resident":
+        return problem.run_resident(plan)
+    execution = (perks.Execution.HOST_LOOP if plan.tier == "host_loop"
+                 else perks.Execution.DEVICE_LOOP)
+    cfg = perks.PerksConfig(execution=execution, sync_every=plan.sync_every,
+                            fuse_steps=plan.fuse_steps)
+    runner = perks.persistent(problem.step_fn(), problem.n_steps, cfg,
+                              on_sync=on_sync)
+    return problem.finalize(runner(problem.initial_state()))
+
+
+def _honors_on_sync(plan: Plan, n_steps: int) -> bool:
+    """Whether this plan's execution path ever calls the problem's
+    ``on_sync`` callback (see ``core.perks.persistent``): HOST_LOOP only
+    chunks when fuse_steps > 1; DEVICE_LOOP only when sync_every < n;
+    the resident kernels and the distributed programs never return to
+    the host mid-run."""
+    if plan.tier == "host_loop":
+        return plan.fuse_steps > 1
+    if plan.tier == "device_loop":
+        return plan.sync_every is not None and plan.sync_every < n_steps
+    return False
+
+
+@dataclasses.dataclass(frozen=True)
+class TimingRow:
+    """One autotune measurement: the plan, its planner prediction, and the
+    measured wall-clock seconds (median over ``iters`` timed calls)."""
+
+    plan: Plan
+    predicted_s: Optional[float]
+    measured_s: float
+
+    @property
+    def prediction_ratio(self) -> Optional[float]:
+        """measured / predicted — how far off the model was (CPU interpret
+        mode inflates this; the *ranking* is what transfers)."""
+        if not self.predicted_s:
+            return None
+        return self.measured_s / self.predicted_s
+
+
+@dataclasses.dataclass(frozen=True)
+class AutotuneResult:
+    best: Plan
+    table: tuple[TimingRow, ...]   # planner order (rank 0 = predicted best)
+
+    def row_for(self, plan: Plan) -> TimingRow:
+        for r in self.table:
+            if r.plan == plan:
+                return r
+        raise KeyError("plan not in autotune table")
+
+
+def _time_once(fn, warmup: int, iters: int) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def autotune(problem: Problem, candidates: Optional[Sequence[Plan]] = None,
+             *, chip=None, mesh=None, top_k: int = 4, warmup: int = 1,
+             iters: int = 3, **plan_kw) -> AutotuneResult:
+    """Measure the top-``top_k`` planner candidates and return the winner.
+
+    ``candidates`` defaults to ``plan_candidates(problem, ...)``
+    (distributed plans are dropped unless ``mesh`` is given). The result's
+    ``table`` keeps the planner's predicted order so callers can report
+    predicted-vs-measured per candidate (the ``exec_plan_*`` benchmark
+    rows); ``best`` is the measured winner.
+    """
+    if candidates is None:
+        kw = dict(plan_kw)
+        if chip is not None:
+            kw["chip"] = chip
+        candidates = _planner.plan_candidates(problem, mesh=mesh, **kw)
+    runnable = [p for p in candidates
+                if p.tier != "distributed" or mesh is not None]
+    if not runnable:
+        raise ValueError("no runnable candidates for this problem/host")
+    rows = []
+    for p in runnable[:max(1, top_k)]:
+        measured = _time_once(lambda: execute(problem, p, mesh=mesh),
+                              warmup, iters)
+        rows.append(TimingRow(p, p.predicted_s, measured))
+    best = min(rows, key=lambda r: r.measured_s).plan
+    return AutotuneResult(best=best, table=tuple(rows))

@@ -1,0 +1,128 @@
+"""The ``Plan`` artifact: one immutable, loggable answer to *how to run*.
+
+A plan is everything the executor needs beyond the problem itself — the
+execution tier, the temporal-blocking depth, the cache assignment, the
+shard axis — frozen into a dataclass with a JSON round-trip so that a
+chosen plan can be stored next to a benchmark CSV, attached to a CI
+artifact, or replayed later with ``Plan.from_json``.
+
+Before this layer the same information was scattered across keyword
+arguments of five ``run_*`` functions and five planner entry points
+(DESIGN.md §7); the Plan is the single record type they all collapse to.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from typing import Any, Optional
+
+#: Execution tiers the executor dispatches on (DESIGN.md §2/§3).
+TIERS = ("host_loop", "device_loop", "resident", "distributed")
+
+#: Row-partition strategies for the distributed tier.
+PARTITIONS = ("rows", "nnz")
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheDecision:
+    """One array (or domain region) the plan keeps on-chip.
+
+    ``cached_bytes`` of ``total_bytes`` stay VMEM-resident across steps —
+    the executor-level record of a ``core.cache_policy.CacheAssignment``.
+    """
+
+    name: str
+    cached_bytes: int
+    total_bytes: int
+
+    @property
+    def fraction(self) -> float:
+        return self.cached_bytes / self.total_bytes if self.total_bytes else 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """An immutable execution plan for one iterative problem.
+
+    Generic fields apply to every problem kind; ``cached_rows``/``sub_rows``
+    are consumed by the resident stencil kernel, ``policy``/``block_rows``
+    by the fused CG kernel, ``shard_axis``/``partition``/``fuse_reductions``
+    by the distributed tier. Unused fields keep their defaults and survive
+    the JSON round-trip unchanged.
+    """
+
+    tier: str
+    n_steps: int = 0                      # 0 = "whatever the problem says"
+    problem: str = ""                     # problem name, for logging only
+    chip: str = "tpu_v5e"
+    # temporal blocking / host sync (DESIGN.md §4)
+    fuse_steps: int = 1
+    sync_every: Optional[int] = None
+    # cache assignment (what stays on-chip across steps)
+    cache: tuple[CacheDecision, ...] = ()
+    cached_rows: Optional[int] = None     # stencil RESIDENT: resident planes
+    sub_rows: int = 128                   # stencil RESIDENT: streaming tile
+    policy: Optional[str] = None          # CG: IMP | VEC | MAT | MIX
+    block_rows: Optional[int] = None      # CG fused kernel row-block size
+    # distributed tier
+    shard_axis: Optional[str] = None
+    partition: str = "rows"
+    fuse_reductions: bool = False         # CG: pipelined one-psum iterations
+    inner_tier: str = "device_loop"       # loop tier inside the mesh program
+    # planner metadata (projected cost of this plan; not used by execute)
+    predicted_s: Optional[float] = None
+    predicted_bound: Optional[str] = None
+
+    def __post_init__(self):
+        if self.tier not in TIERS:
+            raise ValueError(f"tier must be one of {TIERS}, got {self.tier!r}")
+        if self.inner_tier not in ("host_loop", "device_loop"):
+            raise ValueError(
+                f"inner_tier must be host_loop|device_loop, got "
+                f"{self.inner_tier!r}")
+        if self.partition not in PARTITIONS:
+            raise ValueError(
+                f"partition must be one of {PARTITIONS}, got "
+                f"{self.partition!r}")
+        if self.fuse_steps < 1:
+            raise ValueError(f"fuse_steps must be >= 1, got {self.fuse_steps}")
+        if self.n_steps < 0:
+            raise ValueError(f"n_steps must be >= 0, got {self.n_steps}")
+
+    # -- derived quantities ---------------------------------------------------
+
+    @property
+    def barriers(self) -> int:
+        """Device-wide barriers this plan pays: ceil(n_steps/fuse_steps)."""
+        if self.n_steps == 0:
+            return 0
+        return math.ceil(self.n_steps / self.fuse_steps)
+
+    @property
+    def cached_bytes(self) -> int:
+        return sum(d.cached_bytes for d in self.cache)
+
+    # -- JSON round-trip ------------------------------------------------------
+
+    def to_dict(self) -> dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["cache"] = [dataclasses.asdict(c) for c in self.cache]
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict[str, Any]) -> "Plan":
+        d = dict(d)
+        cache = tuple(CacheDecision(**c) for c in d.pop("cache", ()))
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown Plan fields: {sorted(unknown)}")
+        return cls(cache=cache, **d)
+
+    def to_json(self, indent: Optional[int] = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent)
+
+    @classmethod
+    def from_json(cls, text: str) -> "Plan":
+        return cls.from_dict(json.loads(text))

@@ -1,0 +1,290 @@
+"""``plan(problem)``: the one planner behind every PERKS solver.
+
+Before this layer, *how to run* was decided by five separate entry
+points — ``kernels.stencil3d.plan_resident_planes`` (VMEM occupancy),
+``core.cache_policy.plan_caching`` (what-to-cache knapsack),
+``core.cache_policy.plan_fuse_steps`` (temporal-blocking depth),
+``solvers.stencil.plan_for`` (stencil reporting) and
+``solvers.cg.plan_policy`` (Fig.-9 policy pick) — each consumed by a
+different ``run_*`` signature. This module subsumes them: it enumerates
+candidate :class:`~repro.exec.plan.Plan`\\ s per tier × fuse depth ×
+cache assignment, prices each with the paper's performance model
+(``core.perf_model``, Eqs. 5–11 generalized by ``gm_bytes_fused``) plus
+a per-dispatch launch-overhead term, and returns them ranked by
+projected time — not by the ad-hoc byte heuristics the old entry points
+used. ``autotune`` (``repro.exec.executor``) then measures the top
+candidates and picks the winner empirically.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence
+
+from repro.core.cache_policy import (
+    cg_arrays,
+    gm_bytes_fused,
+    plan_caching,
+)
+from repro.core.hardware import CHIPS, Chip, TPU_V5E
+from repro.core.perf_model import project_host_loop, sm_bytes_accessed
+from repro.exec.plan import CacheDecision, Plan
+from repro.exec.problem import Problem
+from repro.kernels.stencil3d import plan_resident_planes
+
+#: Host→device dispatch cost charged per kernel launch (the overhead the
+#: paper's Fig. 3 attributes to kernel termination; O(5 µs) on current
+#: stacks). HOST_LOOP pays it n_steps times, fused tiers once.
+DISPATCH_OVERHEAD_S = 5e-6
+
+#: Per-collective latency floor (one psum/ppermute round on the ICI).
+COLLECTIVE_LATENCY_S = 2e-6
+
+
+def _as_chip(chip) -> Chip:
+    if isinstance(chip, Chip):
+        return chip
+    return CHIPS[chip]
+
+
+def _budget_chip(chip: Chip, budget_bytes: Optional[int]) -> Chip:
+    """Override the chip's on-chip capacity (planner sensitivity studies,
+    proxy-capacity regimes)."""
+    if budget_bytes is None:
+        return chip
+    return dataclasses.replace(chip, onchip_bytes=float(budget_bytes))
+
+
+def _rank(cands: list[Plan]) -> list[Plan]:
+    # predicted time first; ties prefer fewer barriers (deeper fusion),
+    # then more cached bytes — both directions the monotonicity contract
+    # (tests/test_exec.py) relies on.
+    return sorted(cands, key=lambda p: (p.predicted_s, p.barriers,
+                                        -p.cached_bytes))
+
+
+# -----------------------------------------------------------------------------
+# Stencil candidates
+# -----------------------------------------------------------------------------
+
+def _stencil_candidates(problem, chip: Chip, mesh, *, max_fuse: int,
+                        shard_axis: str, sub_rows: int) -> list[Plan]:
+    shape = problem.x.shape
+    db = problem.x.dtype.itemsize
+    cells = int(math.prod(shape))
+    row_cells = int(math.prod(shape[1:]))
+    row_bytes = row_cells * db
+    domain_bytes = cells * db
+    n = problem.n_steps
+    r = problem.spec.radius
+    base = project_host_loop(chip, n_steps=n, domain_cells=cells,
+                             dtype_bytes=db)
+    common = dict(n_steps=n, problem=problem.name, chip=chip.name)
+
+    cands = [
+        Plan(tier="host_loop", predicted_s=base.t_total
+             + n * DISPATCH_OVERHEAD_S, predicted_bound=base.bound, **common),
+        Plan(tier="device_loop", predicted_s=base.t_total
+             + DISPATCH_OVERHEAD_S, predicted_bound=base.bound, **common),
+    ]
+
+    # RESIDENT × fuse depth: VMEM occupancy decides the resident rows per
+    # depth (the wider streaming window of deeper fusion evicts planes).
+    t = 1
+    while t <= max(1, min(max_fuse, n)):
+        rows = plan_resident_planes(shape, db, problem.spec, chip=chip,
+                                    sub_rows=sub_rows, fuse_steps=t)
+        cached_bytes = rows * row_bytes
+        gm = gm_bytes_fused(n, domain_bytes, cached_bytes,
+                            row_bytes=row_bytes, radius=r, fuse_steps=t)
+        t_gm = gm / chip.hbm_bw
+        t_sm = sm_bytes_accessed(n, cached_bytes) / chip.onchip_bw
+        bound = "main_memory" if t_gm >= t_sm else "onchip_memory"
+        cands.append(Plan(
+            tier="resident", fuse_steps=t, cached_rows=rows,
+            sub_rows=sub_rows,
+            cache=(CacheDecision("domain_rows", cached_bytes, domain_bytes),),
+            predicted_s=max(t_gm, t_sm) + DISPATCH_OVERHEAD_S,
+            predicted_bound=bound, **common))
+        t *= 2
+
+    if mesh is not None:
+        n_chips = int(dict(mesh.shape)[shard_axis])
+        shard_rows = shape[0] // n_chips
+        shard_bytes = shard_rows * row_bytes
+        t = 1
+        while t <= max(1, min(max_fuse, n)) and r * min(t, n) <= shard_rows:
+            barriers = math.ceil(n / t)
+            gm = gm_bytes_fused(n, shard_bytes, 0, row_bytes=row_bytes,
+                                radius=r, fuse_steps=t)
+            coll = barriers * (COLLECTIVE_LATENCY_S
+                               + 2 * r * t * row_bytes
+                               / max(chip.ici_bw_per_link, 1.0))
+            cands.append(Plan(
+                tier="distributed", fuse_steps=t, shard_axis=shard_axis,
+                predicted_s=gm / chip.hbm_bw + coll + DISPATCH_OVERHEAD_S,
+                predicted_bound="collective" if coll > gm / chip.hbm_bw
+                else "main_memory", **common))
+            t *= 2
+    return cands
+
+
+# -----------------------------------------------------------------------------
+# CG candidates
+# -----------------------------------------------------------------------------
+
+def cg_policy_from_arrays(arrays, budget_bytes: int) -> dict:
+    """The Fig.-9 policy decision (IMP/VEC/MIX) from a cache plan — the
+    exact logic of the legacy ``solvers.cg.plan_policy``, factored here so
+    both the legacy shim and the candidate generator share it."""
+    cplan = plan_caching(arrays, budget_bytes)
+    vec_frac = min(cplan.fraction_of(nm) for nm in ("r", "p", "x", "Ap"))
+    mat_frac = cplan.fraction_of("A")
+    if vec_frac < 1.0:
+        policy = "IMP"          # vectors don't even fit -> rely on caches
+    elif mat_frac >= 1.0:
+        policy = "MIX"
+    elif mat_frac > 0.0:
+        policy = "MIX"          # partial matrix residency
+    else:
+        policy = "VEC"
+    return {"policy": policy, "vector_fraction": vec_frac,
+            "matrix_fraction": mat_frac,
+            "traffic_saved_per_iter": cplan.traffic_saved_per_step,
+            "_plan": cplan}
+
+
+def _cg_candidates(problem, chip: Chip, mesh, *, shard_axis: str,
+                   sync_every: Optional[int]) -> list[Plan]:
+    from repro.exec.adapters import fused_block_rows
+
+    arrays = problem.cacheable_arrays()
+    budget = int(chip.onchip_bytes * 0.9)
+    pol = cg_policy_from_arrays(arrays, budget)
+    cplan = pol["_plan"]
+    n = problem.n_steps
+    if sync_every is None and problem.on_sync() is not None and n > 1:
+        # the problem declares a convergence check (tol); loop-tier plans
+        # need host-sync points to evaluate it — default to the usual
+        # check cadence, capped so at least one check lands before the end
+        sync_every = min(25, max(1, n - 1))
+
+    total_bytes = sum(a.bytes * (a.loads_per_step + a.stores_per_step)
+                      for a in arrays)
+    vec_traffic = sum(a.bytes * (a.loads_per_step + a.stores_per_step)
+                      for a in arrays if a.name != "A")
+    cache = tuple(CacheDecision(a.array.name, a.cached_bytes, a.array.bytes)
+                  for a in cplan.assignments)
+    common = dict(n_steps=n, problem=problem.name, chip=chip.name,
+                  sync_every=sync_every)
+
+    cands = [
+        Plan(tier="host_loop",
+             predicted_s=n * (total_bytes / chip.hbm_bw
+                              + DISPATCH_OVERHEAD_S), **common),
+        Plan(tier="device_loop", policy="IMP",
+             predicted_s=n * total_bytes / chip.hbm_bw
+             + DISPATCH_OVERHEAD_S, **common),
+    ]
+    has_ell = problem.data is not None
+    if has_ell and pol["vector_fraction"] >= 1.0:
+        bm = fused_block_rows(problem.b.shape[0])
+        cands.append(Plan(
+            tier="resident", policy="VEC", block_rows=bm,
+            cache=tuple(c for c in cache if c.name != "A"),
+            predicted_s=n * (total_bytes - vec_traffic) / chip.hbm_bw
+            + DISPATCH_OVERHEAD_S, **common))
+        if pol["matrix_fraction"] > 0.0:
+            saved = cplan.traffic_saved_per_step
+            cands.append(Plan(
+                tier="resident", policy="MIX", block_rows=bm, cache=cache,
+                predicted_s=n * max(0.0, total_bytes - saved) / chip.hbm_bw
+                + DISPATCH_OVERHEAD_S, **common))
+
+    if mesh is not None and has_ell:
+        n_chips = int(dict(mesh.shape)[shard_axis])
+        local = total_bytes / n_chips
+        for fused, psums in ((False, 2), (True, 1)):
+            cands.append(Plan(
+                tier="distributed", shard_axis=shard_axis,
+                fuse_reductions=fused, policy=pol["policy"],
+                predicted_s=n * (local / chip.hbm_bw
+                                 + psums * COLLECTIVE_LATENCY_S)
+                + DISPATCH_OVERHEAD_S, **common))
+    return cands
+
+
+# -----------------------------------------------------------------------------
+# Public entry points
+# -----------------------------------------------------------------------------
+
+def plan_candidates(problem: Problem, *, chip=TPU_V5E, mesh=None,
+                    budget_bytes: Optional[int] = None, max_fuse: int = 4,
+                    shard_axis: str = "data", sub_rows: int = 128,
+                    sync_every: Optional[int] = None) -> list[Plan]:
+    """Every candidate Plan for ``problem``, ranked by projected time.
+
+    ``chip`` is a :class:`~repro.core.hardware.Chip` or a name from
+    ``CHIPS``; ``budget_bytes`` overrides its on-chip capacity (e.g. the
+    ``PROXY_ONCHIP_BYTES`` regime); ``mesh`` enables distributed
+    candidates over ``shard_axis``; ``max_fuse`` caps temporal blocking.
+    """
+    chip = _budget_chip(_as_chip(chip), budget_bytes)
+    if max_fuse < 1:
+        raise ValueError(f"max_fuse must be >= 1, got {max_fuse}")
+    if problem.kind == "stencil":
+        cands = _stencil_candidates(problem, chip, mesh, max_fuse=max_fuse,
+                                    shard_axis=shard_axis, sub_rows=sub_rows)
+    elif problem.kind == "cg":
+        cands = _cg_candidates(problem, chip, mesh, shard_axis=shard_axis,
+                               sync_every=sync_every)
+    else:
+        raise NotImplementedError(
+            f"no candidate generator for problem kind {problem.kind!r}")
+    cands = [c for c in cands if problem.supports(c.tier)]
+    return _rank(cands)
+
+
+def plan(problem: Problem, *, chip=TPU_V5E, mesh=None,
+         budget_bytes: Optional[int] = None, max_fuse: int = 4,
+         shard_axis: str = "data", sub_rows: int = 128,
+         sync_every: Optional[int] = None) -> Plan:
+    """The planner's top candidate (lowest projected time) for ``problem``."""
+    return plan_candidates(
+        problem, chip=chip, mesh=mesh, budget_bytes=budget_bytes,
+        max_fuse=max_fuse, shard_axis=shard_axis, sub_rows=sub_rows,
+        sync_every=sync_every)[0]
+
+
+# -- legacy planner surfaces (delegated to by the solver shims) ----------------
+
+def stencil_plan_summary(x_shape: Sequence[int], dtype_bytes: int, spec, *,
+                         chip=TPU_V5E, sub_rows: int = 128,
+                         fuse_steps: int = 1) -> dict:
+    """Cache plan + fractions for reporting (the legacy ``plan_for`` dict).
+    Host-side arithmetic on static shapes only — no device ops."""
+    chip = _as_chip(chip)
+    rows = plan_resident_planes(tuple(x_shape), dtype_bytes, spec, chip=chip,
+                                sub_rows=sub_rows, fuse_steps=fuse_steps)
+    row_elems = math.prod(x_shape[1:])
+    domain = math.prod(x_shape)
+    cached = rows * row_elems
+    return {"cached_rows": rows, "cached_cells": cached,
+            "cached_fraction": cached / domain}
+
+
+def cg_policy(n_rows: Optional[int] = None, nnz: Optional[int] = None,
+              dtype_bytes: int = 4, *, chip=TPU_V5E, matrix=None,
+              budget_bytes: Optional[int] = None) -> dict:
+    """The legacy ``plan_policy`` dict (Fig.-9 policy + fractions)."""
+    from repro.core.cache_policy import cg_arrays_for
+    chip = _as_chip(chip)
+    if matrix is not None:
+        arrays = cg_arrays_for(matrix)
+    else:
+        arrays = cg_arrays(n_rows, nnz, dtype_bytes)
+    budget = (int(chip.onchip_bytes * 0.9) if budget_bytes is None
+              else int(budget_bytes))
+    out = cg_policy_from_arrays(arrays, budget)
+    out.pop("_plan")
+    return out

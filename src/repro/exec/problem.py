@@ -1,0 +1,109 @@
+"""The ``Problem`` protocol: what a solver must expose to the executor.
+
+The paper's claim is that PERKS is an execution model "largely independent
+of the solver's implementation". This module is that claim as an
+interface: an iterative problem is a step function ``state -> state``, an
+initial state, a list of :class:`~repro.core.cache_policy.CacheableArray`
+regions the cache planner can reason about, a halo/partition spec for the
+distributed tier, and an oracle for equivalence checking. Anything that
+satisfies it runs under every tier via ``repro.exec.execute`` and is
+planned by ``repro.exec.plan`` — a new workload is an adapter
+(:mod:`repro.exec.adapters`), not a new solver file.
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import Any, Callable, Optional, Sequence
+
+from repro.core.cache_policy import CacheableArray
+
+
+@dataclasses.dataclass(frozen=True)
+class HaloSpec:
+    """How a problem shards over one mesh axis (distributed tier).
+
+    ``axis`` is the array axis that row-partitions; ``halo`` is how many
+    rows of neighbour data ONE step needs (0 = no neighbour dependency —
+    the barrier is a reduction, not an exchange); ``partitions`` lists the
+    row-repacking strategies the problem supports.
+    """
+
+    axis: int = 0
+    halo: int = 0
+    partitions: tuple[str, ...] = ("rows",)
+
+
+class Problem(abc.ABC):
+    """One iterative workload, described for the PERKS executor.
+
+    Subclasses (adapters) must provide the four abstract pieces; the tier
+    hooks ``run_resident``/``run_distributed`` raise by default — a
+    problem that does not override them simply does not support the tier
+    (``supports`` reports which do).
+    """
+
+    #: problem family, used by the planner to pick a candidate generator
+    kind: str = "generic"
+    #: human-readable instance name (logged into Plan.problem)
+    name: str = "problem"
+    #: number of time steps / iterations this instance runs
+    n_steps: int = 0
+
+    # -- required surface -----------------------------------------------------
+
+    @abc.abstractmethod
+    def initial_state(self) -> Any:
+        """The state fed to the first step (a pytree of arrays)."""
+
+    @abc.abstractmethod
+    def step_fn(self) -> Callable[[Any], Any]:
+        """The pure step function ``state -> state`` (one iteration)."""
+
+    @abc.abstractmethod
+    def cacheable_arrays(self, *, fuse_steps: int = 1) -> Sequence[CacheableArray]:
+        """The arrays/regions a cache plan may keep on-chip (paper §III-B)."""
+
+    @abc.abstractmethod
+    def oracle(self) -> Any:
+        """Reference result after ``n_steps`` (jnp oracle, host-loop order)."""
+
+    # -- optional surface -----------------------------------------------------
+
+    def finalize(self, state: Any) -> Any:
+        """Map the final loop state to the user-facing result."""
+        return state
+
+    def on_sync(self) -> Optional[Callable[[Any, int], bool]]:
+        """Host-sync callback for chunked execution (e.g. CG convergence);
+        returning True stops early. None = run all steps."""
+        return None
+
+    def halo_spec(self) -> Optional[HaloSpec]:
+        """Partition description for the distributed tier (None = cannot
+        shard)."""
+        return None
+
+    def domain_bytes(self) -> int:
+        """Total bytes of the per-step working set (for planner reporting)."""
+        return sum(a.bytes for a in self.cacheable_arrays())
+
+    # -- tier hooks -----------------------------------------------------------
+
+    def run_resident(self, plan) -> Any:
+        raise NotImplementedError(
+            f"{type(self).__name__} does not implement the resident tier")
+
+    def run_distributed(self, plan, mesh) -> Any:
+        raise NotImplementedError(
+            f"{type(self).__name__} does not implement the distributed tier")
+
+    def supports(self, tier: str) -> bool:
+        """Which Plan tiers this problem can execute."""
+        if tier in ("host_loop", "device_loop"):
+            return True
+        if tier == "resident":
+            return type(self).run_resident is not Problem.run_resident
+        if tier == "distributed":
+            return type(self).run_distributed is not Problem.run_distributed
+        return False

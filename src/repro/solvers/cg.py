@@ -1,55 +1,38 @@
-"""Conjugate-gradient solver under the PERKS execution model (paper §V-C).
+"""Legacy CG-solver surface — now thin shims over ``repro.exec``
+(paper §V-C; executor refactor in DESIGN.md §7).
 
-Execution tiers (Fig. 7/9 reproduction):
-  * ``host_loop``   — one dispatch per CG iteration (baseline; the role
-                      Ginkgo's per-iteration kernel launches play).
-  * ``device_loop`` — PERKS control flow: iterations fused via
-                      ``lax.fori_loop``; periodic host sync for convergence
-                      checks (``sync_every``).
-  * fused kernel    — ``kernels/cg_fused.py``: the whole loop inside one
-                      Pallas kernel, vectors VMEM-resident; matrix resident
-                      (MIX) or streamed (VEC) per the caching policy.
+The workload lives in :class:`repro.exec.CGProblem` (step function,
+cacheable arrays by **true** nnz, fused-kernel and distributed tier
+hooks); the policy decision (Fig. 9's IMP/VEC/MAT/MIX) is one outcome of
+the unified planner ``repro.exec.plan``. Every ``run_*`` below builds a
+Problem + Plan and calls ``execute`` — identical results to the
+pre-refactor implementations — and emits one ``DeprecationWarning`` per
+process. New call sites::
 
-Caching policies (Fig. 9): IMP = device_loop, nothing explicitly resident;
-VEC = vectors resident, A streamed; MAT/MIX = vectors + matrix resident.
-The policy ranking comes from ``core.cache_policy.cg_arrays`` (r > A),
-fed the **true** nnz from the ``repro.sparse`` containers — padded slots
-are a data-layout cost (``PaddingReport``), not a caching-priority input.
+    from repro import exec as rexec
+    problem = rexec.CGProblem.from_ell(data, cols, b, iters, matrix=csr)
+    x, rr = rexec.execute(problem, rexec.plan(problem))
 
-Datasets: the SuiteSparse-proxy registry (``repro.sparse.generate``) —
-2D/3D Poisson, FEM-like variable band, graph Laplacians (random-regular
-and power-law), diagonally-shifted random sparse — sized to straddle a
-scaled on-chip capacity the way Fig. 7's suite straddles L2, plus the
-legacy synthetic names (``poisson_64``..., ``banded_64k``). Every entry
-loads as block-ELL (``load_dataset``); for irregular entries
-``load_sell`` + ``run_device_loop_sell`` is the recommended path — the
-SELL-C-σ layout pads per slice instead of to the global max row nnz
-(``repro.sparse.choose_format`` makes the call per matrix).
-
-Temporal blocking for CG (DESIGN.md §4): ``run_distributed`` with
-``fuse_reductions=True`` merges the two dependent reduction barriers per
-iteration into one chunked psum via the pipelined-CG residual recurrence
-(arXiv:1410.4054). ``partition="nnz"`` load-balances the row shards by
-nonzeros (``repro.sparse.partition``) instead of naive equal-rows.
+This module keeps the *data* surface unchanged: the dataset registry
+(``DATASETS``/``load_matrix``/``load_dataset``/``load_sell``) and the
+:class:`SellOperator` device container are not deprecated.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, PartitionSpec as P
+import jax.numpy as jnp
 
-from repro.core import perks
-from repro.dist.sharding import smap
-from repro.core.cache_policy import cg_arrays, cg_arrays_for, plan_caching
 from repro.core.hardware import Chip, TPU_V5E
-from repro.kernels import ref as kref
+from repro.exec import CGProblem, Plan, execute
+from repro.exec.adapters import fused_block_rows  # noqa: F401  (re-export)
+from repro.exec import planner as _planner
+from repro.exec.deprecation import warn_once
 from repro.kernels import ops as kops
-from repro.sparse import CSRMatrix, SellMatrix, shard_by_nnz
+from repro.sparse import CSRMatrix, SellMatrix
 from repro.sparse.generate import REGISTRY, banded_spd, poisson2d
 
 
@@ -122,59 +105,52 @@ def load_sell(name: str, c: int = 32, sigma: int = 256) -> SellOperator:
     return SellOperator.from_matrix(load_matrix(name).to_sell(c=c, sigma=sigma))
 
 
-# -- execution tiers -------------------------------------------------------------
+# -- execution tiers (deprecated shims over repro.exec) -------------------------
 
 def run_host_loop(data, cols, b, iters: int):
-    state = (jnp.zeros_like(b), b, b, jnp.vdot(b, b))
-    step = functools.partial(kref.cg_iteration, data=data, cols=cols)
-    state = perks.host_loop(step, iters)(state)
-    return state[0], state[3]
-
-
-def _device_loop(step, b, iters, sync_every, tol):
-    state = (jnp.zeros_like(b), b, b, jnp.vdot(b, b))
-    on_sync = None
-    if tol is not None:
-        thresh = tol * float(jnp.vdot(b, b))
-        on_sync = lambda s, k: float(s[3]) < thresh
-    runner = perks.persistent(
-        step, iters, perks.PerksConfig(sync_every=sync_every), on_sync=on_sync)
-    state = runner(state)
-    return state[0], state[3]
+    """Deprecated shim: one dispatch per CG iteration (baseline tier)."""
+    warn_once("solvers.cg.run_host_loop",
+              "repro.exec.execute(CGProblem.from_ell(...), "
+              "Plan(tier='host_loop'))")
+    return execute(CGProblem.from_ell(data, cols, b, iters),
+                   Plan(tier="host_loop"))
 
 
 def run_device_loop(data, cols, b, iters: int, *,
                     sync_every: Optional[int] = None,
                     tol: Optional[float] = None):
-    step = functools.partial(kref.cg_iteration, data=data, cols=cols)
-    return _device_loop(step, b, iters, sync_every, tol)
+    """Deprecated shim: PERKS device-loop CG (periodic host sync via
+    ``sync_every``; early exit below ``tol``)."""
+    warn_once("solvers.cg.run_device_loop",
+              "repro.exec.execute(CGProblem.from_ell(..., tol=tol), "
+              "Plan(tier='device_loop', sync_every=...))")
+    return execute(CGProblem.from_ell(data, cols, b, iters, tol=tol),
+                   Plan(tier="device_loop", sync_every=sync_every))
 
 
 def run_device_loop_sell(op: SellOperator, b, iters: int, *,
                          sync_every: Optional[int] = None,
                          tol: Optional[float] = None):
-    """PERKS device-loop CG with the SELL-C-σ SpMV kernel — the
-    irregular-matrix path (per-slice K instead of global-K ELL padding)."""
-    step = lambda s: kref.cg_iteration_matvec(s, op.matvec)
-    return _device_loop(step, b, iters, sync_every, tol)
-
-
-def fused_block_rows(n: int, cap: int = 512) -> int:
-    """Largest power-of-two block size <= cap dividing n — the fused VEC
-    kernel streams whole row blocks, so ``block_rows`` must divide n."""
-    bm = 1
-    while bm * 2 <= cap and n % (bm * 2) == 0:
-        bm *= 2
-    return bm
+    """Deprecated shim: PERKS device-loop CG with the SELL-C-σ SpMV kernel
+    — the irregular-matrix path (per-slice K instead of global-K ELL
+    padding)."""
+    warn_once("solvers.cg.run_device_loop_sell",
+              "repro.exec.execute(CGProblem.from_matvec(op.matvec, ...), "
+              "Plan(tier='device_loop', sync_every=...))")
+    return execute(CGProblem.from_matvec(op.matvec, b, iters, tol=tol),
+                   Plan(tier="device_loop", sync_every=sync_every))
 
 
 def run_fused(data, cols, b, iters: int, *, policy: str = "MIX",
               block_rows: int = 256):
-    """policy: VEC (A streamed) | MAT/MIX (A resident)."""
-    resident = policy in ("MAT", "MIX")
-    x, rr = kops.cg(data, cols, b, iters=iters, resident_matrix=resident,
-                    block_rows=block_rows)
-    return x, rr[0]
+    """Deprecated shim: the fused Pallas CG kernel. policy: VEC (A
+    streamed) | MAT/MIX (A resident)."""
+    warn_once("solvers.cg.run_fused",
+              "repro.exec.execute(CGProblem.from_ell(...), "
+              "Plan(tier='resident', policy=..., block_rows=...))")
+    return execute(CGProblem.from_ell(data, cols, b, iters),
+                   Plan(tier="resident", policy=policy,
+                        block_rows=block_rows))
 
 
 def plan_policy(n_rows: Optional[int] = None, nnz: Optional[int] = None,
@@ -182,123 +158,34 @@ def plan_policy(n_rows: Optional[int] = None, nnz: Optional[int] = None,
                 matrix=None, budget_bytes: Optional[int] = None) -> dict:
     """Which Fig.-9 policy the cache planner selects for this problem.
 
-    Pass either ``(n_rows, nnz)`` or ``matrix=`` (any ``repro.sparse``
-    container — the planner then ranks A by its **true** nnz, so a badly
-    padded layout cannot distort the VEC/MAT/MIX decision; padding is
-    fixed by choosing the format, not by caching less). ``budget_bytes``
-    overrides the chip's VMEM budget — e.g. the scaled proxy capacity
-    (``repro.sparse.generate.PROXY_ONCHIP_BYTES``) the registry datasets
-    straddle the way Fig. 7's suite straddles L2.
+    Legacy planner entry point — subsumed by ``repro.exec.plan`` (whose
+    CG candidates carry the same policy); kept as a delegation to
+    ``exec.planner.cg_policy``. Pass either ``(n_rows, nnz)`` or
+    ``matrix=`` (any ``repro.sparse`` container — the planner then ranks
+    A by its **true** nnz). ``budget_bytes`` overrides the chip's VMEM
+    budget — e.g. the scaled proxy capacity
+    (``repro.sparse.generate.PROXY_ONCHIP_BYTES``).
     """
-    if matrix is not None:
-        arrays = cg_arrays_for(matrix)
-        n_rows = matrix.shape[0]
-    else:
-        arrays = cg_arrays(n_rows, nnz, dtype_bytes)
-    budget = (int(chip.onchip_bytes * 0.9) if budget_bytes is None
-              else int(budget_bytes))
-    plan = plan_caching(arrays, budget)
-    vec_frac = min(plan.fraction_of(n) for n in ("r", "p", "x", "Ap"))
-    mat_frac = plan.fraction_of("A")
-    if vec_frac < 1.0:
-        policy = "IMP"          # vectors don't even fit -> rely on caches
-    elif mat_frac >= 1.0:
-        policy = "MIX"
-    elif mat_frac > 0.0:
-        policy = "MIX"          # partial matrix residency
-    else:
-        policy = "VEC"
-    return {"policy": policy, "vector_fraction": vec_frac,
-            "matrix_fraction": mat_frac,
-            "traffic_saved_per_iter": plan.traffic_saved_per_step}
+    return _planner.cg_policy(n_rows, nnz, dtype_bytes, chip=chip,
+                              matrix=matrix, budget_bytes=budget_bytes)
 
 
 # -- distributed CG ---------------------------------------------------------------
 
-def run_distributed(data, cols, b, iters: int, mesh: Mesh, *,
+def run_distributed(data, cols, b, iters: int, mesh, *,
                     axis: str = "data", fuse_reductions: bool = False,
                     partition: str = "rows"):
-    """Row-partitioned CG: local SpMV gathers the global p (all-gather),
-    dot products psum — the collective IS the paper's device barrier.
-
-    ``fuse_reductions=True`` is the CG face of temporal blocking
-    (DESIGN.md §4; "Pipelined Iterative Solvers with Kernel Fusion",
-    arXiv:1410.4054): textbook CG pays TWO dependent reduction barriers
-    per iteration (p·Ap, then r'·r' after the axpys). The fused variant
-    stacks FOUR simultaneous partial dots — p·Ap, r·Ap, Ap·Ap and the
-    *current* r·r — into ONE chunked psum and recovers the new residual
-    norm from the recurrence
-
-        ||r'||² = ||r||² - 2α(r·Ap) + α²(Ap·Ap),   α = ||r||²/(p·Ap)
-
-    — one synchronization per iteration instead of two. Carrying the
-    recurrence alone compounds rounding noise once CG converges (β =
-    noise/noise explodes the search direction — the classic pipelined-CG
-    instability), so each iteration re-grounds on the true r·r that rode
-    along in the same psum: the estimate's error is then one step deep
-    and stays *relative* to the residual scale. Tests bound the drift vs
-    textbook CG.
-
-    ``partition="nnz"`` repacks the rows into nnz-balanced equal-shaped
-    shards (``repro.sparse.partition.shard_by_nnz``) before sharding, so
-    the per-iteration barrier waits for equal SpMV work instead of equal
-    row counts — on a power-law graph naive equal-rows sharding leaves
-    one shard with most of the nonzeros. Padded rows are algebraically
-    invisible (zero data/rhs); the result is gathered back to original
-    row order.
-    """
-    if partition == "nnz":
-        parts = mesh.shape[axis]
-        sh = shard_by_nnz(np.asarray(data), np.asarray(cols),
-                          np.asarray(b), parts)
-        x_pad, rr = run_distributed(
-            jnp.asarray(sh.data), jnp.asarray(sh.cols), jnp.asarray(sh.b),
-            iters, mesh, axis=axis, fuse_reductions=fuse_reductions)
-        return x_pad[jnp.asarray(sh.pos)], rr
-    if partition != "rows":
-        raise ValueError(f"partition must be 'rows' or 'nnz', got "
-                         f"{partition!r}")
-    n = b.shape[0]
-
-    def step(state):
-        x, r, p, rr = state
-
-        def local(iter_data, iter_cols, p_full, x_l, r_l, p_l, rr_s):
-            from repro.kernels.ref import _safe_div
-            ap_l = jnp.sum(iter_data * p_full[iter_cols], axis=1)
-            if fuse_reductions:
-                dots = jax.lax.psum(
-                    jnp.stack([jnp.vdot(p_l, ap_l), jnp.vdot(r_l, ap_l),
-                               jnp.vdot(ap_l, ap_l), jnp.vdot(r_l, r_l)]),
-                    axis)
-                pap, rap, apap, rr_true = dots[0], dots[1], dots[2], dots[3]
-                alpha = _safe_div(rr_true, pap)
-                x_l = x_l + alpha * p_l
-                r_l = r_l - alpha * ap_l
-                rr_new = jnp.maximum(
-                    rr_true - 2.0 * alpha * rap + alpha * alpha * apap, 0.0)
-                beta = _safe_div(rr_new, rr_true)
-                p_l = r_l + beta * p_l
-                return x_l, r_l, p_l, rr_new
-            else:
-                pap = jax.lax.psum(jnp.vdot(p_l, ap_l), axis)
-                alpha = _safe_div(rr_s, pap)
-                x_l = x_l + alpha * p_l
-                r_l = r_l - alpha * ap_l
-                rr_new = jax.lax.psum(jnp.vdot(r_l, r_l), axis)
-            beta = _safe_div(rr_new, rr_s)
-            p_l = r_l + beta * p_l
-            return x_l, r_l, p_l, rr_new
-
-        return smap(
-            local, mesh=mesh,
-            in_specs=(P(axis, None), P(axis, None), P(), P(axis), P(axis),
-                      P(axis), P()),
-            out_specs=(P(axis), P(axis), P(axis), P()),
-
-        )(data, cols, p, x, r, p, rr)
-
-    state = (jnp.zeros_like(b), b, b, jnp.vdot(b, b))
-    with mesh:
-        state = perks.device_loop(step, iters)(state)
-    return state[0], state[3]
+    """Deprecated shim: row-partitioned CG (the psum IS the paper's device
+    barrier). ``fuse_reductions=True`` = pipelined one-psum iterations
+    (arXiv:1410.4054); ``partition="nnz"`` = nnz-balanced shards
+    (``repro.sparse.partition``). See ``repro.exec.adapters.cg_distributed``
+    for the full story."""
+    warn_once("solvers.cg.run_distributed",
+              "repro.exec.execute(CGProblem.from_ell(...), "
+              "Plan(tier='distributed', shard_axis=axis, "
+              "fuse_reductions=..., partition=...), mesh=mesh)")
+    return execute(CGProblem.from_ell(data, cols, b, iters),
+                   Plan(tier="distributed", shard_axis=axis,
+                        fuse_reductions=fuse_reductions,
+                        partition=partition),
+                   mesh=mesh)

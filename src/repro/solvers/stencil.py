@@ -1,60 +1,66 @@
-"""System-level iterative stencil solver under the PERKS execution model.
+"""Legacy stencil-solver surface — now thin shims over ``repro.exec``.
 
-Three single-chip execution tiers (all bit-identical results):
-  * ``host_loop``   — one dispatch per time step (the paper's baseline),
-  * ``device_loop`` — PERKS control-flow: all steps fused in one dispatch
-                      (``lax.fori_loop`` + donation),
-  * ``resident``    — the full PERKS scheme via the Pallas kernels
-                      (time loop inside the kernel, domain rows resident
-                      in VMEM; cached-row count from the cache policy).
+The PERKS execution model is solver-agnostic; since the executor refactor
+(DESIGN.md §7) the real machinery lives in ``repro.exec``:
 
-plus the multi-chip runner: row-partitioned domain inside ``shard_map``,
-per-step halo ``ppermute`` (the device-wide barrier), PERKS device-loop
-over time. Works on any mesh axis.
+* :class:`repro.exec.StencilProblem` — the workload adapter (step
+  function, cacheable regions, resident/distributed tier hooks),
+* :func:`repro.exec.plan` — the one planner (subsumes ``plan_for``),
+* :func:`repro.exec.execute` — the single dispatch path over all tiers.
 
-Temporal blocking (DESIGN.md §4, arXiv:2306.03336): ``fuse_steps=t``
-advances t time steps per barrier. Distributed, that is ONE wide halo
-exchange of ``radius*t`` rows per t steps, with the fused local update
-redundantly recomputing the shrinking halo — ceil(steps/t) exchanges
-instead of ``steps``. Resident, it is t steps per HBM streaming pass
-(see ``kernels/stencil2d.py``). The fused update performs the exact
-per-step arithmetic (identical in exact arithmetic); on real backends
-results agree to <= 2 ulp — XLA reassociates the weighted-sum chain
-differently for different window shapes (DESIGN.md §4).
+Every ``run_*`` below builds a Problem + Plan and calls ``execute`` —
+results are identical to the pre-refactor implementations (the moved
+code is the same code) and each entry point emits one
+``DeprecationWarning`` per process. New call sites should use the
+executor directly::
+
+    from repro import exec as rexec
+    problem = rexec.StencilProblem(x, spec, steps)
+    y = rexec.execute(problem, rexec.plan(problem))
+
+``make_distributed_step`` and ``fusion_schedule`` are re-exported from
+``repro.exec.adapters`` unchanged (they are implementation pieces, not
+deprecated entry points).
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-import math
 from typing import Optional
 
-import jax
-import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
-
 from repro.core import perks
-from repro.dist.sharding import smap
-from repro.core.cache_policy import plan_caching, stencil_arrays
 from repro.core.hardware import Chip, TPU_V5E
-from repro.dist.collectives import axis_size, halo_exchange
-from repro.kernels.common import StencilSpec, get_spec
-from repro.kernels import ref as kref
-from repro.kernels import ops as kops
+from repro.exec import Plan, StencilProblem, execute
+from repro.exec import planner as _planner
+from repro.exec.adapters import (  # noqa: F401  (re-exported, used by tests)
+    fusion_schedule,
+    make_distributed_step,
+)
+from repro.exec.deprecation import warn_once
+from repro.kernels.common import StencilSpec
 from repro.kernels.stencil3d import plan_resident_planes
 
 
 # -- single chip ---------------------------------------------------------------
 
 def run_host_loop(x, spec: StencilSpec, steps: int):
-    """Baseline: one jit dispatch per step (kernel 'terminates' each step)."""
-    step = functools.partial(kref.stencil_step, spec=spec)
-    return perks.host_loop(step, steps)(x)
+    """Baseline: one jit dispatch per step (kernel 'terminates' each step).
+
+    Deprecated shim: use ``execute(StencilProblem(...), Plan('host_loop'))``.
+    """
+    warn_once("solvers.stencil.run_host_loop",
+              "repro.exec.execute(StencilProblem(x, spec, steps), "
+              "Plan(tier='host_loop'))")
+    return execute(StencilProblem(x, spec, steps), Plan(tier="host_loop"))
+
 
 def run_device_loop(x, spec: StencilSpec, steps: int):
-    """PERKS control-flow transform at the XLA level."""
-    step = functools.partial(kref.stencil_step, spec=spec)
-    return perks.device_loop(step, steps)(x)
+    """PERKS control-flow transform at the XLA level.
+
+    Deprecated shim: use ``execute(StencilProblem(...), Plan('device_loop'))``.
+    """
+    warn_once("solvers.stencil.run_device_loop",
+              "repro.exec.execute(StencilProblem(x, spec, steps), "
+              "Plan(tier='device_loop'))")
+    return execute(StencilProblem(x, spec, steps), Plan(tier="device_loop"))
 
 
 def run_resident(x, spec: StencilSpec, steps: int, *,
@@ -62,119 +68,55 @@ def run_resident(x, spec: StencilSpec, steps: int, *,
                  sub_rows: int = 128, fuse_steps: int = 1):
     """Full PERKS: Pallas kernel, VMEM-resident rows chosen by the cache
     policy (interior-first; halo never cached). ``fuse_steps=t`` advances
-    t steps per HBM streaming pass (temporal blocking, DESIGN.md §4); the
-    planner accounts for the t-wider streaming window."""
+    t steps per HBM streaming pass (temporal blocking, DESIGN.md §4).
+
+    Deprecated shim: use ``execute`` with a resident Plan (or let
+    ``repro.exec.plan`` pick ``cached_rows`` for you).
+    """
+    warn_once("solvers.stencil.run_resident",
+              "repro.exec.execute(StencilProblem(x, spec, steps), "
+              "repro.exec.plan(problem, chip=...))")
     if cached_rows is None:
         cached_rows = plan_resident_planes(
             x.shape, x.dtype.itemsize, spec, chip=chip, sub_rows=sub_rows,
             fuse_steps=fuse_steps)
-    if cached_rows >= x.shape[0]:
-        return kops.stencil_resident(x, spec=spec, steps=steps)
-    return kops.stencil_perks(x, spec=spec, steps=steps,
-                              cached_rows=cached_rows, sub_rows=sub_rows,
-                              fuse_steps=fuse_steps)
+    return execute(
+        StencilProblem(x, spec, steps),
+        Plan(tier="resident", cached_rows=cached_rows, sub_rows=sub_rows,
+             fuse_steps=fuse_steps, chip=chip.name))
 
 
 def plan_for(x_shape, dtype_bytes, spec: StencilSpec, *,
              chip: Chip = TPU_V5E, sub_rows: int = 128,
              fuse_steps: int = 1):
     """Cache plan + projected speedup for reporting (paper Eqs. 5-11).
-    Host-side arithmetic on static shapes only — no device ops."""
-    rows = plan_resident_planes(x_shape, dtype_bytes, spec, chip=chip,
-                                sub_rows=sub_rows, fuse_steps=fuse_steps)
-    row_elems = math.prod(x_shape[1:])
-    domain = math.prod(x_shape)
-    cached = rows * row_elems
-    return {"cached_rows": rows, "cached_cells": cached,
-            "cached_fraction": cached / domain}
+    Legacy planner entry point — subsumed by ``repro.exec.plan``; kept as
+    a delegation to ``exec.planner.stencil_plan_summary``."""
+    return _planner.stencil_plan_summary(
+        x_shape, dtype_bytes, spec, chip=chip, sub_rows=sub_rows,
+        fuse_steps=fuse_steps)
 
 
 # -- multi chip ----------------------------------------------------------------
 
-def make_distributed_step(spec: StencilSpec, mesh: Mesh, axis: str = "data",
-                          *, fuse_steps: int = 1):
-    """``fuse_steps`` distributed time steps per halo exchange, inside
-    shard_map over ``axis`` (leading-dim row partition).
-
-    ``fuse_steps=1`` is the classic step: exchange ``radius`` boundary rows,
-    update locally. ``fuse_steps=t`` exchanges a ``radius*t`` wide halo ONCE
-    and applies the stencil t times to the extended window, which shrinks by
-    ``radius`` per application — the halo region is redundantly recomputed
-    instead of re-exchanged (temporal blocking, DESIGN.md §4). The global
-    Dirichlet border is re-frozen after every inner application, so the
-    fused step performs exactly the arithmetic of t exchanged steps
-    (agreement to <= 2 ulp on real backends; see DESIGN.md §4).
-    """
-    r = spec.radius
-    t = fuse_steps
-
-    def local_step(x_l):
-        h = x_l.shape[0]
-        n = axis_size(axis)
-        idx = jax.lax.axis_index(axis)
-        H = h * n                      # global leading extent
-        top, bot = halo_exchange(x_l, r * t, axis)
-        w = jnp.concatenate([top, x_l, bot], axis=0)
-        lo = idx * h - r * t           # global row index of w[0] (<0 at edges)
-        for _ in range(t):
-            L = w.shape[0]
-            upd = spec.apply_rows(w, r, L - r)
-            # freeze the first/last `r` rows of the *global* domain; rows
-            # outside the domain (edge shards' zero-filled halo) fall under
-            # the same mask and only ever feed other frozen rows.
-            rows = lo + r + jnp.arange(L - 2 * r)
-            frozen = (rows < r) | (rows >= H - r)
-            shape = (L - 2 * r,) + (1,) * (x_l.ndim - 1)
-            w = jnp.where(frozen.reshape(shape), w[r:L - r], upd)
-            lo = lo + r
-        return w
-
-    pspec = P(axis, *([None] * (spec.ndim - 1)))
-    return smap(local_step, mesh=mesh, in_specs=(pspec,),
-                out_specs=pspec)
-
-
-def fusion_schedule(steps: int, fuse_steps: int) -> list[tuple[int, int]]:
-    """How ``steps`` decompose into fused chunks: ``[(n_chunks, chunk_t)]``
-    with one halo exchange per chunk — ceil(steps/fuse_steps) exchanges
-    total. A non-dividing tail gets one narrower chunk (its halo is only
-    ``radius * tail`` wide), never an overshoot."""
-    full, rem = divmod(steps, fuse_steps)
-    sched = []
-    if full:
-        sched.append((full, fuse_steps))
-    if rem:
-        sched.append((1, rem))
-    return sched
-
-
-def run_distributed(x, spec: StencilSpec, steps: int, mesh: Mesh,
+def run_distributed(x, spec: StencilSpec, steps: int, mesh,
                     *, axis: str = "data",
                     execution: perks.Execution = perks.Execution.DEVICE_LOOP,
                     fuse_steps: int = 1):
     """Multi-chip PERKS stencil: the halo ppermute is the device-wide
-    barrier; the time loop is fused (DEVICE_LOOP) or host-driven.
+    barrier; ``fuse_steps=t`` issues one ``radius*t``-wide exchange per t
+    steps (DESIGN.md §4).
 
-    ``fuse_steps=t`` issues one ``radius*t``-wide exchange per t steps —
-    ceil(steps/t) collectives instead of ``steps`` — and performs the
-    exact per-step arithmetic (<= 2 ulp agreement on real backends, see
-    DESIGN.md §4). Requires ``radius*t`` rows per shard (the halo must
-    come from the adjacent neighbour only).
+    Deprecated shim: use ``execute`` with a distributed Plan.
     """
-    t = int(fuse_steps)
-    n = int(dict(mesh.shape)[axis])
-    shard_rows = x.shape[0] // n
-    if t < 1:
-        raise ValueError(f"fuse_steps must be >= 1, got {t}")
-    if spec.radius * min(t, steps) > shard_rows:
-        raise ValueError(
-            f"fuse_steps={t} needs a {spec.radius * t}-row halo but shards "
-            f"have only {shard_rows} rows ({x.shape[0]} over {n} shards)")
-    with mesh:
-        for n_chunks, chunk_t in fusion_schedule(steps, t):
-            step = make_distributed_step(spec, mesh, axis,
-                                         fuse_steps=chunk_t)
-            runner = perks.persistent(
-                step, n_chunks, perks.PerksConfig(execution=execution))
-            x = runner(x)
-    return x
+    warn_once("solvers.stencil.run_distributed",
+              "repro.exec.execute(StencilProblem(x, spec, steps), "
+              "Plan(tier='distributed', shard_axis=axis, fuse_steps=t), "
+              "mesh=mesh)")
+    inner = ("host_loop" if execution == perks.Execution.HOST_LOOP
+             else "device_loop")
+    return execute(
+        StencilProblem(x, spec, steps),
+        Plan(tier="distributed", shard_axis=axis, fuse_steps=fuse_steps,
+             inner_tier=inner),
+        mesh=mesh)
