@@ -1,0 +1,90 @@
+"""``batch_*`` rows: per-instance time under batched multi-tenant dispatch.
+
+For one stencil family and one CG operator, sweeps the batch width B and
+reports the *steady-state* per-instance time of ONE batched dispatch
+(``repro.exec.batch``) against the sequential baseline — a loop of
+single-instance dispatches, i.e. what a service pays when it serves each
+user alone. Both sides build their persistent runner ONCE (the
+``SolverService`` regime: warmup compiles, timed calls pay dispatch +
+execution only), and both sides use the same tier (``device_loop``), so
+the row isolates exactly the dispatch-amortization effect the batched
+tier exists for — not compile amortization, not tier choice. The
+planner's preferred tier for each B rides along in ``derived``
+(``planned_tier``).
+
+Geomean of the B>1 speedups is returned for the summary row.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.util import row, time_fn
+from repro.core import perks
+from repro.core.hardware import TPU_V5E
+from repro.exec import BatchedProblem, CGProblem, StencilProblem, plan
+from repro.kernels.common import get_spec
+from repro.solvers.cg import load_dataset
+
+#: tier used for the measured comparison on both sides
+TIER = "device_loop"
+
+
+def _sweep(section: str, instances, chip, b_list, steps: int) -> list[float]:
+    """Rows for one problem family; returns the B>1 speedups."""
+    step = instances[0].step_fn()       # shared operands: one step fn
+    run_one = perks.device_loop(step, steps)
+    states = [p.initial_state() for p in instances]
+    t_seq, _ = time_fn(lambda: [run_one(s) for s in states],
+                       warmup=1, iters=3)
+    seq_per_inst = t_seq / len(instances)
+
+    speedups = []
+    for b in b_list:
+        bp = BatchedProblem.from_instances(instances[:b])
+        run_batch = perks.device_loop(jax.vmap(step), steps)
+        state = bp.initial_state()
+        t_b, _ = time_fn(lambda: run_batch(state), warmup=1, iters=3)
+        per_inst = t_b / b
+        speedup = seq_per_inst / per_inst
+        planned = plan(bp, chip=chip)
+        row(f"batch_{section}_b{b}", per_inst * 1e6 / steps,
+            f"B={b};tier={TIER};per_instance_us={per_inst * 1e6:.1f};"
+            f"seq_per_instance_us={seq_per_inst * 1e6:.1f};"
+            f"speedup_vs_seq={speedup:.2f};"
+            f"planned_tier={planned.tier};planned_fuse={planned.fuse_steps};"
+            f"chip={chip.name}")
+        if b > 1:
+            speedups.append(speedup)
+    return speedups
+
+
+def run(quick: bool = True, chip=TPU_V5E) -> float:
+    b_list = (1, 8) if quick else (1, 2, 4, 8, 16)
+    b_max = max(b_list)
+    steps = 16
+
+    spec = get_spec("2d5pt")
+    stencil_insts = [
+        StencilProblem(
+            jax.random.normal(jax.random.key(i), (48, 48), jnp.float32),
+            spec, steps)
+        for i in range(b_max)
+    ]
+    speedups = _sweep("stencil_2d5pt", stencil_insts, chip, b_list, steps)
+
+    data, cols = load_dataset("poisson_64")
+    cg_insts = [
+        CGProblem.from_ell(
+            data, cols,
+            jax.random.normal(jax.random.key(100 + i), (data.shape[0],),
+                              jnp.float32),
+            steps)
+        for i in range(b_max)
+    ]
+    speedups += _sweep("cg_poisson_64", cg_insts, chip, b_list, steps)
+
+    geo = math.exp(sum(math.log(s) for s in speedups) / len(speedups))
+    return geo

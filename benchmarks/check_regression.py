@@ -1,0 +1,130 @@
+"""CI perf-regression gate on the planner's *deterministic* projections.
+
+Wall-clock timing on shared CI runners is too noisy to gate on; the perf
+model (``core.perf_model``, paper Eqs. 5-11, generalized by the batched
+planner) is pure arithmetic over static shapes and chip specs —
+bit-reproducible on any machine. This script projects the planner's
+winning time for a fixed portfolio of problems (stencil families at
+production shapes, CG at several operator sizes, each at batch 1 and 8)
+and compares against the committed baseline:
+
+    PYTHONPATH=src python benchmarks/check_regression.py            # gate
+    PYTHONPATH=src python benchmarks/check_regression.py --update   # refresh
+
+The gate fails when any projection regresses more than ``TOLERANCE`` (5%)
+versus ``baseline_projections.json``, when a baseline entry disappears
+(coverage regression), or when a new entry is not yet in the baseline
+(refresh it in the same PR that adds the entry). Improvements are
+reported and allowed — refresh the baseline to lock them in.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax
+import jax.numpy as jnp
+
+from repro.exec import CGProblem, StencilProblem, plan
+from repro.kernels.common import get_spec
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+BASELINE_PATH = os.path.join(_HERE, "baseline_projections.json")
+
+# allowed slowdown before the gate fails
+TOLERANCE = 0.05
+
+# planner-visible portfolio: (family, shape, steps) x batch, projected on
+# ShapeDtypeStruct domains — no device memory is ever allocated
+STENCILS = (
+    ("2d5pt", (4096, 4096), 1000),
+    ("2d25pt", (2048, 2048), 500),
+    ("3d7pt", (256, 256, 128), 200),
+    ("3d27pt", (128, 128, 128), 200),
+)
+CGS = (
+    (65_536, 8, 200),
+    (1_048_576, 16, 100),
+)
+BATCHES = (1, 8)
+
+
+def current_projections() -> dict[str, float]:
+    out: dict[str, float] = {}
+    for name, shape, steps in STENCILS:
+        spec = get_spec(name)
+        x = jax.ShapeDtypeStruct(shape, jnp.float32)
+        problem = StencilProblem(x, spec, steps)
+        dims = "x".join(map(str, shape))
+        for b in BATCHES:
+            chosen = plan(problem, batch=b)
+            out[f"stencil_{name}_{dims}_n{steps}_b{b}"] = chosen.predicted_s
+    for n, k, iters in CGS:
+        problem = CGProblem(
+            b=jax.ShapeDtypeStruct((n,), jnp.float32),
+            n_steps=iters,
+            data=jax.ShapeDtypeStruct((n, k), jnp.float32),
+            cols=None,
+        )
+        for b in BATCHES:
+            chosen = plan(problem, batch=b)
+            out[f"cg_n{n}_k{k}_i{iters}_b{b}"] = chosen.predicted_s
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--update",
+        action="store_true",
+        help="rewrite the baseline with current projections",
+    )
+    ap.add_argument("--baseline", default=BASELINE_PATH)
+    args = ap.parse_args(argv)
+
+    current = current_projections()
+    if args.update:
+        with open(args.baseline, "w") as f:
+            json.dump(current, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {len(current)} projections to {args.baseline}")
+        return 0
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    failures = []
+    print(f"{'problem':48s} {'baseline_s':>12s} {'current_s':>12s} {'ratio':>7s}")
+    for key in sorted(baseline):
+        if key not in current:
+            failures.append(f"{key}: projection disappeared (coverage regression)")
+            continue
+        base, cur = baseline[key], current[key]
+        ratio = cur / base if base else float("inf")
+        mark = ""
+        if ratio > 1.0 + TOLERANCE:
+            mark = "  <-- REGRESSION"
+            pct = (ratio - 1.0) * 100.0
+            failures.append(f"{key}: {base:.3e}s -> {cur:.3e}s ({pct:+.1f}%)")
+        elif ratio < 1.0 - TOLERANCE:
+            mark = "  (improved; --update to lock in)"
+        print(f"{key:48s} {base:12.4e} {cur:12.4e} {ratio:7.3f}{mark}")
+    for key in sorted(set(current) - set(baseline)):
+        failures.append(f"{key}: not in baseline — refresh it with --update")
+
+    if failures:
+        print(f"\nFAIL: {len(failures)} projection regression(s):", file=sys.stderr)
+        for line in failures:
+            print(f"  {line}", file=sys.stderr)
+        return 1
+    print(f"\nOK: {len(baseline)} projections within {TOLERANCE:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

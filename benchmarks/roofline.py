@@ -9,7 +9,6 @@ from __future__ import annotations
 
 import glob
 import json
-from pathlib import Path
 
 from benchmarks.util import row
 

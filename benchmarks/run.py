@@ -17,6 +17,9 @@ Prints ``name,us_per_call,derived`` CSV rows:
                     predicted vs measured time per candidate Plan
                     (DESIGN.md §7); the chosen Plan JSON lands in
                     $REPRO_PLAN_JSON when set
+  batch_*           beyond-paper: batched multi-tenant execution — per-
+                    instance time of one B-wide dispatch vs a sequential
+                    per-user loop (DESIGN.md §8)
   decode_*          beyond-paper: persistent LM decode vs host loop
   train_fused_*     beyond-paper: K optimizer steps per dispatch
   roofline_*        §Roofline cells from the dry-run artifacts (if present)
@@ -38,8 +41,8 @@ import sys
 # the former puts benchmarks/ (not the repo root) on sys.path.
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
-SECTIONS = ("stencil", "fuse", "cg", "policy", "exec", "decode", "train",
-            "roofline")
+SECTIONS = ("stencil", "fuse", "cg", "policy", "exec", "batch", "decode",
+            "train", "roofline")
 
 
 def _parse_sections(text: str) -> set[str]:
@@ -67,7 +70,7 @@ def main(argv=None) -> None:
 
     quick = os.environ.get("REPRO_BENCH_FULL", "0") != "1"
     from benchmarks import stencil_bench, cg_bench, policy_bench, decode_bench
-    from benchmarks import exec_bench, train_bench
+    from benchmarks import batch_bench, exec_bench, train_bench
     from benchmarks.util import row
     from repro.core.hardware import CHIPS
 
@@ -93,6 +96,8 @@ def main(argv=None) -> None:
         policy_bench.run_concurrency(chip=chip)
     if "exec" in sections:
         exec_bench.run(quick=quick, chip=chip)
+    if "batch" in sections:
+        geomeans["batch"] = batch_bench.run(quick=quick, chip=chip)
     if "decode" in sections:
         geomeans["decode"] = decode_bench.run(
             archs=("qwen2-0.5b", "mamba2-780m") if quick

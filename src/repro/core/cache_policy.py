@@ -25,7 +25,7 @@ greedy approach ... gives mostly the best performance".
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import Sequence
 
 
 @dataclasses.dataclass(frozen=True)

@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from collections import Counter, defaultdict
+from collections import Counter
 from typing import Optional
 
 _DTYPE_BYTES = {

@@ -18,7 +18,6 @@ from collections import Counter
 from typing import Mapping, Optional
 
 from repro.core.hardware import Chip, TPU_V5E
-from repro.core.cache_policy import CachePlan
 
 
 # ---------------------------------------------------------------------------

@@ -38,11 +38,9 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-import functools
-from typing import Any, Callable, Optional, Sequence
+from typing import Any, Callable, Optional
 
 import jax
-import jax.numpy as jnp
 
 
 class Execution(enum.Enum):

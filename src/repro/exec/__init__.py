@@ -15,6 +15,11 @@ One solver-agnostic pipeline behind every iterative workload:
   points; ranks candidates with the paper's performance model.
 * :func:`execute` / :func:`autotune` (``executor.py``) — the single
   dispatch path over all tiers, and measured top-k plan selection.
+* :class:`BatchedProblem` (``batch.py``, DESIGN.md §8) — B instances
+  behind one persistent dispatch per tier; ``plan(problem, batch=B)``
+  re-prices candidates under the B-scaled working set, and
+  ``runtime/solver_service.py`` serves heterogeneous request queues
+  through it.
 
 The legacy ``solvers/stencil.py`` and ``solvers/cg.py`` surfaces are
 thin deprecated shims over this package.
@@ -26,6 +31,11 @@ from repro.exec.adapters import (
     fusion_schedule,
     make_distributed_step,
 )
+from repro.exec.batch import (
+    BatchedProblem,
+    autotune_batch_sweep,
+    execute_sequential,
+)
 from repro.exec.executor import AutotuneResult, TimingRow, autotune, execute
 from repro.exec.plan import TIERS, CacheDecision, Plan
 from repro.exec.planner import plan, plan_candidates
@@ -33,6 +43,7 @@ from repro.exec.problem import HaloSpec, Problem
 
 __all__ = [
     "AutotuneResult",
+    "BatchedProblem",
     "CGProblem",
     "CacheDecision",
     "HaloSpec",
@@ -42,7 +53,9 @@ __all__ = [
     "TIERS",
     "TimingRow",
     "autotune",
+    "autotune_batch_sweep",
     "execute",
+    "execute_sequential",
     "fused_block_rows",
     "fusion_schedule",
     "make_distributed_step",

@@ -168,6 +168,18 @@ class StencilProblem(Problem):
     def domain_bytes(self) -> int:
         return int(math.prod(self.x.shape)) * self.x.dtype.itemsize
 
+    # -- batching -------------------------------------------------------------
+
+    def payload(self):
+        return self.x
+
+    def with_payload(self, payload) -> "StencilProblem":
+        return dataclasses.replace(self, x=payload)
+
+    def batch_key(self) -> tuple:
+        return ("stencil", self.spec.name, tuple(self.x.shape),
+                str(self.x.dtype), self.n_steps)
+
     # -- tiers ----------------------------------------------------------------
 
     def run_resident(self, plan):
@@ -375,6 +387,38 @@ class CGProblem(Problem):
 
     def halo_spec(self) -> HaloSpec:
         return HaloSpec(axis=0, halo=0, partitions=("rows", "nnz"))
+
+    # -- batching -------------------------------------------------------------
+
+    def payload(self):
+        return self.b
+
+    def with_payload(self, payload) -> "CGProblem":
+        return dataclasses.replace(self, b=payload)
+
+    def batch_key(self) -> tuple:
+        # instances share one batch iff they solve against the SAME
+        # operator object (A is shared across the dispatch, only the
+        # right-hand sides are stacked) with the same iteration budget.
+        # Operator shapes/dtypes ride along so a reused id() of a freed
+        # array can only ever collide with a same-shaped operator (plan
+        # caches additionally pin their operands — solver_service.py).
+        def sig(a):
+            if a is None:
+                return None
+            shape = getattr(a, "shape", None)
+            dtype = getattr(a, "dtype", None)
+            return (id(a), None if shape is None else tuple(shape),
+                    str(dtype))
+
+        return ("cg", sig(self.data), sig(self.cols), id(self.matvec),
+                id(self.matrix), tuple(self.b.shape), str(self.b.dtype),
+                self.n_steps, self.tol)
+
+    def array_scales_with_batch(self, name: str) -> bool:
+        # the matrix is shared by every instance of a batch; the Krylov
+        # vectors are per-instance (DESIGN.md §8)
+        return name != "A"
 
     # -- tiers ----------------------------------------------------------------
 

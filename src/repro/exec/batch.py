@@ -1,0 +1,224 @@
+"""Batched multi-tenant execution: B instances, one persistent dispatch.
+
+PERKS amortizes kernel-launch and barrier cost by moving the *time* loop
+inside one dispatch; this module applies the same economics across
+*instances*. A service solving thousands of small stencil/CG problems for
+concurrent users should not pay a dispatch (and, distributed, a
+collective barrier) per user — it should stack the per-instance payloads
+and advance all of them through ONE persistent dispatch per step chunk.
+
+:class:`BatchedProblem` is that transform, expressed inside the existing
+``Problem -> plan -> execute`` pipeline (DESIGN.md §7/§8): it wraps B
+shape-compatible instances (equal :meth:`Problem.batch_key`) and is
+itself a :class:`~repro.exec.problem.Problem`, so ``execute`` and
+``autotune`` need no new entry points:
+
+* loop tiers — the step function becomes ``jax.vmap(step)``; the
+  host/device loop runs unchanged over the stacked state, so the per-step
+  dispatch is paid once per *batch*, not once per instance;
+* resident tier — the Pallas kernel dispatch is vmapped (the batch
+  becomes a leading grid dimension; per-instance VMEM residency shrinks
+  to budget/B, which the planner accounts for);
+* distributed tier — ``jax.vmap`` composes over the ``shard_map``
+  programs, so one halo exchange / psum round serves every instance in
+  the batch (collectives batch their payloads instead of multiplying
+  their latency floors).
+
+Results are bit-identical to running each instance alone on the same
+tier (asserted over all 13 stencil specs and the sparse registry in
+``tests/test_batch.py``); the queueing/packing layer that feeds fleets of
+heterogeneous requests into these batches is
+``repro.runtime.solver_service``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cache_policy import CacheableArray
+from repro.exec.problem import HaloSpec, Problem
+
+
+def stack_payloads(problems: Sequence[Problem]):
+    """Stack every instance's payload pytree along a new leading axis."""
+    return jax.tree.map(lambda *ls: jnp.stack(ls),
+                        *[p.payload() for p in problems])
+
+
+class BatchedProblem(Problem):
+    """B independent instances of one problem family as a single Problem.
+
+    Instances must agree on :meth:`Problem.batch_key` — same family, same
+    shapes/dtypes, same shared operands (e.g. the CG matrix), same step
+    count — so one traced program serves the whole batch. ``pad_to``
+    replicates the last instance up to a fixed dispatch width (the
+    serving layer uses it to keep ONE jit cache entry per batch key);
+    padded lanes are dropped by :meth:`split`.
+    """
+
+    kind = "batched"
+
+    def __init__(self, instances: Sequence[Problem], *,
+                 pad_to: Optional[int] = None):
+        instances = tuple(instances)
+        if not instances:
+            raise ValueError("BatchedProblem needs at least one instance")
+        keys = {p.batch_key() for p in instances}
+        if len(keys) > 1:
+            raise ValueError(
+                f"instances are not batch-compatible; got {len(keys)} "
+                f"distinct batch keys: {sorted(map(str, keys))[:3]} ...")
+        if any(isinstance(p, BatchedProblem) for p in instances):
+            raise ValueError("BatchedProblem instances cannot nest")
+        self.pad = 0
+        if pad_to is not None:
+            if pad_to < len(instances):
+                raise ValueError(
+                    f"pad_to={pad_to} < {len(instances)} instances")
+            self.pad = pad_to - len(instances)
+            instances = instances + (instances[-1],) * self.pad
+        self.instances = instances
+        self.template = instances[0]
+        self.batch = len(instances)
+        self.kind = self.template.kind
+        self.n_steps = self.template.n_steps
+        self.name = f"batch{self.batch}_{self.template.name}"
+        self.payload_stack = stack_payloads(instances)
+
+    @classmethod
+    def from_instances(cls, instances: Sequence[Problem], *,
+                       pad_to: Optional[int] = None) -> "BatchedProblem":
+        return cls(instances, pad_to=pad_to)
+
+    # -- protocol -------------------------------------------------------------
+
+    def initial_state(self):
+        build = lambda pay: self.template.with_payload(pay).initial_state()
+        return jax.vmap(build)(self.payload_stack)
+
+    def step_fn(self) -> Callable[[Any], Any]:
+        return jax.vmap(self.template.step_fn())
+
+    def finalize(self, state):
+        # adapters' finalize is structural (tuple re-selection), so it maps
+        # over the stacked state unchanged
+        return self.template.finalize(state)
+
+    def oracle(self):
+        return jax.tree.map(lambda *ls: jnp.stack(ls),
+                            *[p.oracle() for p in self.instances])
+
+    def on_sync(self) -> Optional[Callable[[Any, int], bool]]:
+        """Batched convergence check: stop only when EVERY instance's own
+        check passes (the batch shares one dispatch, so the slowest
+        instance owns the step count). None if any instance never stops."""
+        cbs = [p.on_sync() for p in self.instances]
+        if any(cb is None for cb in cbs):
+            return None
+
+        def all_done(state, k) -> bool:
+            for i, cb in enumerate(cbs):
+                s_i = jax.tree.map(lambda a: a[i], state)
+                if not cb(s_i, k):
+                    return False
+            return True
+
+        return all_done
+
+    def cacheable_arrays(self, *, fuse_steps: int = 1) -> Sequence[CacheableArray]:
+        """Per-instance regions scale by B; shared operands (e.g. the CG
+        matrix — ``array_scales_with_batch``) keep one copy. This is the
+        B-scaled working set the planner prices (DESIGN.md §8)."""
+        out = []
+        for a in self.template.cacheable_arrays(fuse_steps=fuse_steps):
+            if self.template.array_scales_with_batch(a.name):
+                a = dataclasses.replace(a, bytes=a.bytes * self.batch)
+            out.append(a)
+        return out
+
+    def domain_bytes(self) -> int:
+        return self.template.domain_bytes() * self.batch
+
+    def halo_spec(self) -> Optional[HaloSpec]:
+        return self.template.halo_spec()
+
+    def supports(self, tier: str) -> bool:
+        return self.template.supports(tier)
+
+    # -- batching surface -----------------------------------------------------
+
+    def payload(self):
+        return self.payload_stack
+
+    def with_payload(self, payload) -> "BatchedProblem":
+        # rebuild only the real instances and re-pad to the same width, so
+        # the clone's split() keeps dropping the padded lanes
+        real = self.batch - self.pad
+        rebuilt = [
+            self.template.with_payload(
+                jax.tree.map(lambda a, i=i: a[i], payload))
+            for i in range(real)
+        ]
+        return type(self)(rebuilt, pad_to=self.batch if self.pad else None)
+
+    def batch_key(self) -> tuple:
+        return ("batched", self.batch, self.template.batch_key())
+
+    def split(self, result) -> list:
+        """Per-instance results (padded lanes dropped), in instance order."""
+        real = self.batch - self.pad
+        return [jax.tree.map(lambda a: a[i], result) for i in range(real)]
+
+    # -- tiers ----------------------------------------------------------------
+
+    def run_resident(self, plan):
+        """One vmapped kernel dispatch: the batch rides as a leading grid
+        dimension over the template's resident Pallas kernel."""
+        run = lambda pay: self.template.with_payload(pay).run_resident(plan)
+        return jax.vmap(run)(self.payload_stack)
+
+    def run_distributed(self, plan, mesh):
+        """vmap over the template's shard_map program: every instance's
+        halo exchange / reduction rides in the SAME ppermute/psum round,
+        so the per-barrier collective latency is paid once per batch."""
+        if plan.partition == "nnz":
+            raise NotImplementedError(
+                "batched distributed CG supports partition='rows' only "
+                "(the nnz repack is a host-side permutation; apply it to "
+                "the operator before batching)")
+        run = lambda pay: self.template.with_payload(pay).run_distributed(
+            plan, mesh)
+        return jax.vmap(run)(self.payload_stack)
+
+
+def execute_sequential(problems: Sequence[Problem], plan, *, mesh=None) -> list:
+    """The unbatched baseline: run each instance through its own dispatch
+    sequence (``execute`` per instance, same plan). This is what a naive
+    service does per user — the comparison target for ``batch_bench``."""
+    from repro.exec.executor import execute
+    if plan.batch != 1:
+        raise ValueError("execute_sequential wants a single-instance plan")
+    return [execute(p, plan, mesh=mesh) for p in problems]
+
+
+def autotune_batch_sweep(instances: Sequence[Problem],
+                         batches: Sequence[int] = (1, 2, 4, 8),
+                         **autotune_kw) -> dict:
+    """``autotune`` at several batch widths: for each B, measure the
+    planner's top candidates on a B-wide :class:`BatchedProblem` built
+    from the first B instances. Returns ``{B: AutotuneResult}``; each
+    winning plan's *per-instance* time is ``measured_s / B`` (the curve a
+    service operator reads to pick ``max_batch``)."""
+    from repro.exec.executor import autotune
+    instances = list(instances)
+    out = {}
+    for b in batches:
+        if b < 1 or b > len(instances):
+            raise ValueError(
+                f"batch {b} needs 1..{len(instances)} instances")
+        out[b] = autotune(BatchedProblem.from_instances(instances[:b]),
+                          **autotune_kw)
+    return out

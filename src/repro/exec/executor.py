@@ -36,11 +36,16 @@ def execute(problem: Problem, plan: Plan, *, mesh=None):
         raise ValueError(
             f"plan.n_steps={plan.n_steps} != problem.n_steps="
             f"{problem.n_steps}; plans are per-problem-instance")
+    if plan.batch != problem.batch:
+        raise ValueError(
+            f"plan.batch={plan.batch} != problem.batch={problem.batch}; "
+            f"a batched plan must run the BatchedProblem it was made for "
+            f"(repro.exec.batch)")
     if not problem.supports(plan.tier):
         raise NotImplementedError(
             f"{type(problem).__name__} does not support tier {plan.tier!r}")
     on_sync = problem.on_sync()
-    if on_sync is not None and not _honors_on_sync(plan, problem.n_steps):
+    if on_sync is not None and not honors_on_sync(plan, problem.n_steps):
         # The problem declared a convergence check (e.g. CGProblem.tol)
         # but this plan has no host-sync points to evaluate it at — the
         # run completes all n_steps. plan() sets sync_every on loop-tier
@@ -65,7 +70,7 @@ def execute(problem: Problem, plan: Plan, *, mesh=None):
     return problem.finalize(runner(problem.initial_state()))
 
 
-def _honors_on_sync(plan: Plan, n_steps: int) -> bool:
+def honors_on_sync(plan: Plan, n_steps: int) -> bool:
     """Whether this plan's execution path ever calls the problem's
     ``on_sync`` callback (see ``core.perks.persistent``): HOST_LOOP only
     chunks when fuse_steps > 1; DEVICE_LOOP only when sync_every < n;

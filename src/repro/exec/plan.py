@@ -56,6 +56,9 @@ class Plan:
     n_steps: int = 0                      # 0 = "whatever the problem says"
     problem: str = ""                     # problem name, for logging only
     chip: str = "tpu_v5e"
+    #: instances served by ONE dispatch of this plan (repro.exec.batch):
+    #: per-step traffic scales by batch, dispatch/barrier cost does not.
+    batch: int = 1
     # temporal blocking / host sync (DESIGN.md §4)
     fuse_steps: int = 1
     sync_every: Optional[int] = None
@@ -89,6 +92,8 @@ class Plan:
             raise ValueError(f"fuse_steps must be >= 1, got {self.fuse_steps}")
         if self.n_steps < 0:
             raise ValueError(f"n_steps must be >= 0, got {self.n_steps}")
+        if self.batch < 1:
+            raise ValueError(f"batch must be >= 1, got {self.batch}")
 
     # -- derived quantities ---------------------------------------------------
 

@@ -68,7 +68,8 @@ def _rank(cands: list[Plan]) -> list[Plan]:
 # -----------------------------------------------------------------------------
 
 def _stencil_candidates(problem, chip: Chip, mesh, *, max_fuse: int,
-                        shard_axis: str, sub_rows: int) -> list[Plan]:
+                        shard_axis: str, sub_rows: int, batch: int = 1,
+                        name: Optional[str] = None) -> list[Plan]:
     shape = problem.x.shape
     db = problem.x.dtype.itemsize
     cells = int(math.prod(shape))
@@ -77,33 +78,45 @@ def _stencil_candidates(problem, chip: Chip, mesh, *, max_fuse: int,
     domain_bytes = cells * db
     n = problem.n_steps
     r = problem.spec.radius
+    B = batch
     base = project_host_loop(chip, n_steps=n, domain_cells=cells,
                              dtype_bytes=db)
-    common = dict(n_steps=n, problem=problem.name, chip=chip.name)
+    common = dict(n_steps=n, problem=name or problem.name, chip=chip.name,
+                  batch=B)
 
+    # every instance's domain is independent, so memory traffic scales by
+    # B; the per-dispatch launch overhead does NOT (the whole batch rides
+    # one dispatch) — which is the entire economics of the batched tier.
     cands = [
-        Plan(tier="host_loop", predicted_s=base.t_total
+        Plan(tier="host_loop", predicted_s=B * base.t_total
              + n * DISPATCH_OVERHEAD_S, predicted_bound=base.bound, **common),
-        Plan(tier="device_loop", predicted_s=base.t_total
+        Plan(tier="device_loop", predicted_s=B * base.t_total
              + DISPATCH_OVERHEAD_S, predicted_bound=base.bound, **common),
     ]
 
     # RESIDENT × fuse depth: VMEM occupancy decides the resident rows per
     # depth (the wider streaming window of deeper fusion evicts planes).
+    # Each instance of a batch gets 1/B of the on-chip budget — the
+    # B-scaled working set (DESIGN.md §8) — so large batches naturally
+    # demote toward the loop tiers.
+    chip_per_inst = (chip if B == 1 else dataclasses.replace(
+        chip, onchip_bytes=chip.onchip_bytes / B))
     t = 1
     while t <= max(1, min(max_fuse, n)):
-        rows = plan_resident_planes(shape, db, problem.spec, chip=chip,
+        rows = plan_resident_planes(shape, db, problem.spec,
+                                    chip=chip_per_inst,
                                     sub_rows=sub_rows, fuse_steps=t)
         cached_bytes = rows * row_bytes
         gm = gm_bytes_fused(n, domain_bytes, cached_bytes,
                             row_bytes=row_bytes, radius=r, fuse_steps=t)
-        t_gm = gm / chip.hbm_bw
-        t_sm = sm_bytes_accessed(n, cached_bytes) / chip.onchip_bw
+        t_gm = B * gm / chip.hbm_bw
+        t_sm = B * sm_bytes_accessed(n, cached_bytes) / chip.onchip_bw
         bound = "main_memory" if t_gm >= t_sm else "onchip_memory"
         cands.append(Plan(
             tier="resident", fuse_steps=t, cached_rows=rows,
             sub_rows=sub_rows,
-            cache=(CacheDecision("domain_rows", cached_bytes, domain_bytes),),
+            cache=(CacheDecision("domain_rows", B * cached_bytes,
+                                 B * domain_bytes),),
             predicted_s=max(t_gm, t_sm) + DISPATCH_OVERHEAD_S,
             predicted_bound=bound, **common))
         t *= 2
@@ -117,13 +130,15 @@ def _stencil_candidates(problem, chip: Chip, mesh, *, max_fuse: int,
             barriers = math.ceil(n / t)
             gm = gm_bytes_fused(n, shard_bytes, 0, row_bytes=row_bytes,
                                 radius=r, fuse_steps=t)
+            # one ppermute round per barrier carries EVERY instance's halo:
+            # the latency floor is paid once per barrier, the payload B×.
             coll = barriers * (COLLECTIVE_LATENCY_S
-                               + 2 * r * t * row_bytes
+                               + B * 2 * r * t * row_bytes
                                / max(chip.ici_bw_per_link, 1.0))
             cands.append(Plan(
                 tier="distributed", fuse_steps=t, shard_axis=shard_axis,
-                predicted_s=gm / chip.hbm_bw + coll + DISPATCH_OVERHEAD_S,
-                predicted_bound="collective" if coll > gm / chip.hbm_bw
+                predicted_s=B * gm / chip.hbm_bw + coll + DISPATCH_OVERHEAD_S,
+                predicted_bound="collective" if coll > B * gm / chip.hbm_bw
                 else "main_memory", **common))
             t *= 2
     return cands
@@ -155,10 +170,20 @@ def cg_policy_from_arrays(arrays, budget_bytes: int) -> dict:
 
 
 def _cg_candidates(problem, chip: Chip, mesh, *, shard_axis: str,
-                   sync_every: Optional[int]) -> list[Plan]:
+                   sync_every: Optional[int], batch: int = 1,
+                   name: Optional[str] = None) -> list[Plan]:
     from repro.exec.adapters import fused_block_rows
 
-    arrays = problem.cacheable_arrays()
+    # B-scaled working set (DESIGN.md §8): the Krylov vectors are
+    # per-instance (bytes ×B — both footprint and traffic), while the
+    # matrix is SHARED by every instance of the batch: one resident copy
+    # serves all B solves, and a batched SpMV streams A once per
+    # iteration for the whole batch (the block-Krylov amortization).
+    arrays = [
+        a if not problem.array_scales_with_batch(a.name) or batch == 1
+        else dataclasses.replace(a, bytes=a.bytes * batch)
+        for a in problem.cacheable_arrays()
+    ]
     budget = int(chip.onchip_bytes * 0.9)
     pol = cg_policy_from_arrays(arrays, budget)
     cplan = pol["_plan"]
@@ -175,8 +200,8 @@ def _cg_candidates(problem, chip: Chip, mesh, *, shard_axis: str,
                       for a in arrays if a.name != "A")
     cache = tuple(CacheDecision(a.array.name, a.cached_bytes, a.array.bytes)
                   for a in cplan.assignments)
-    common = dict(n_steps=n, problem=problem.name, chip=chip.name,
-                  sync_every=sync_every)
+    common = dict(n_steps=n, problem=name or problem.name, chip=chip.name,
+                  sync_every=sync_every, batch=batch)
 
     cands = [
         Plan(tier="host_loop",
@@ -189,16 +214,26 @@ def _cg_candidates(problem, chip: Chip, mesh, *, shard_axis: str,
     has_ell = problem.data is not None
     if has_ell and pol["vector_fraction"] >= 1.0:
         bm = fused_block_rows(problem.b.shape[0])
+        # cached bytes still move through on-chip memory every iteration
+        # (Eq. 7) — without this term a fully-cached solve would predict
+        # a batch-independent dispatch constant and the projection gate
+        # could never see a regression on small CG problems
+        vec_cache = tuple(c for c in cache if c.name != "A")
+        t_sm_vec = sm_bytes_accessed(n, sum(c.cached_bytes
+                                            for c in vec_cache))
         cands.append(Plan(
-            tier="resident", policy="VEC", block_rows=bm,
-            cache=tuple(c for c in cache if c.name != "A"),
-            predicted_s=n * (total_bytes - vec_traffic) / chip.hbm_bw
+            tier="resident", policy="VEC", block_rows=bm, cache=vec_cache,
+            predicted_s=max(n * (total_bytes - vec_traffic) / chip.hbm_bw,
+                            t_sm_vec / chip.onchip_bw)
             + DISPATCH_OVERHEAD_S, **common))
         if pol["matrix_fraction"] > 0.0:
             saved = cplan.traffic_saved_per_step
+            t_sm_all = sm_bytes_accessed(n, sum(c.cached_bytes
+                                                for c in cache))
             cands.append(Plan(
                 tier="resident", policy="MIX", block_rows=bm, cache=cache,
-                predicted_s=n * max(0.0, total_bytes - saved) / chip.hbm_bw
+                predicted_s=max(n * max(0.0, total_bytes - saved)
+                                / chip.hbm_bw, t_sm_all / chip.onchip_bw)
                 + DISPATCH_OVERHEAD_S, **common))
 
     if mesh is not None and has_ell:
@@ -221,26 +256,46 @@ def _cg_candidates(problem, chip: Chip, mesh, *, shard_axis: str,
 def plan_candidates(problem: Problem, *, chip=TPU_V5E, mesh=None,
                     budget_bytes: Optional[int] = None, max_fuse: int = 4,
                     shard_axis: str = "data", sub_rows: int = 128,
-                    sync_every: Optional[int] = None) -> list[Plan]:
+                    sync_every: Optional[int] = None,
+                    batch: int = 1) -> list[Plan]:
     """Every candidate Plan for ``problem``, ranked by projected time.
 
     ``chip`` is a :class:`~repro.core.hardware.Chip` or a name from
     ``CHIPS``; ``budget_bytes`` overrides its on-chip capacity (e.g. the
     ``PROXY_ONCHIP_BYTES`` regime); ``mesh`` enables distributed
     candidates over ``shard_axis``; ``max_fuse`` caps temporal blocking.
+
+    ``batch`` plans for B instances served by ONE dispatch
+    (``repro.exec.batch``): per-step traffic and per-instance VMEM
+    budgets scale with B, dispatch/barrier overheads do not, so tiers and
+    fuse depths re-rank under the B-scaled working set. Passing a
+    :class:`~repro.exec.batch.BatchedProblem` infers ``batch`` from it.
     """
+    from repro.exec.batch import BatchedProblem
     chip = _budget_chip(_as_chip(chip), budget_bytes)
     if max_fuse < 1:
         raise ValueError(f"max_fuse must be >= 1, got {max_fuse}")
-    if problem.kind == "stencil":
-        cands = _stencil_candidates(problem, chip, mesh, max_fuse=max_fuse,
-                                    shard_axis=shard_axis, sub_rows=sub_rows)
-    elif problem.kind == "cg":
-        cands = _cg_candidates(problem, chip, mesh, shard_axis=shard_axis,
-                               sync_every=sync_every)
+    name = problem.name
+    template = problem
+    if isinstance(problem, BatchedProblem):
+        if batch not in (1, problem.batch):
+            raise ValueError(
+                f"batch={batch} conflicts with problem.batch="
+                f"{problem.batch}")
+        batch = problem.batch
+        template = problem.template
+    if batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
+    if template.kind == "stencil":
+        cands = _stencil_candidates(template, chip, mesh, max_fuse=max_fuse,
+                                    shard_axis=shard_axis, sub_rows=sub_rows,
+                                    batch=batch, name=name)
+    elif template.kind == "cg":
+        cands = _cg_candidates(template, chip, mesh, shard_axis=shard_axis,
+                               sync_every=sync_every, batch=batch, name=name)
     else:
         raise NotImplementedError(
-            f"no candidate generator for problem kind {problem.kind!r}")
+            f"no candidate generator for problem kind {template.kind!r}")
     cands = [c for c in cands if problem.supports(c.tier)]
     return _rank(cands)
 
@@ -248,12 +303,12 @@ def plan_candidates(problem: Problem, *, chip=TPU_V5E, mesh=None,
 def plan(problem: Problem, *, chip=TPU_V5E, mesh=None,
          budget_bytes: Optional[int] = None, max_fuse: int = 4,
          shard_axis: str = "data", sub_rows: int = 128,
-         sync_every: Optional[int] = None) -> Plan:
+         sync_every: Optional[int] = None, batch: int = 1) -> Plan:
     """The planner's top candidate (lowest projected time) for ``problem``."""
     return plan_candidates(
         problem, chip=chip, mesh=mesh, budget_bytes=budget_bytes,
         max_fuse=max_fuse, shard_axis=shard_axis, sub_rows=sub_rows,
-        sync_every=sync_every)[0]
+        sync_every=sync_every, batch=batch)[0]
 
 
 # -- legacy planner surfaces (delegated to by the solver shims) ----------------

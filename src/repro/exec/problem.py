@@ -16,6 +16,8 @@ import abc
 import dataclasses
 from typing import Any, Callable, Optional, Sequence
 
+import jax
+
 from repro.core.cache_policy import CacheableArray
 
 
@@ -49,6 +51,9 @@ class Problem(abc.ABC):
     name: str = "problem"
     #: number of time steps / iterations this instance runs
     n_steps: int = 0
+    #: how many independent instances this problem carries (1 = a single
+    #: instance; ``repro.exec.batch.BatchedProblem`` overrides)
+    batch: int = 1
 
     # -- required surface -----------------------------------------------------
 
@@ -87,6 +92,40 @@ class Problem(abc.ABC):
     def domain_bytes(self) -> int:
         """Total bytes of the per-step working set (for planner reporting)."""
         return sum(a.bytes for a in self.cacheable_arrays())
+
+    # -- batching surface (repro.exec.batch) ----------------------------------
+
+    def payload(self) -> Any:
+        """The per-instance data that varies across a batch (a pytree of
+        arrays). Everything else — operators, specs, step counts — is
+        *shared* by every instance of a batch; two instances may be packed
+        together only when their ``batch_key`` matches. Defaults to the
+        initial state."""
+        return self.initial_state()
+
+    def with_payload(self, payload: Any) -> "Problem":
+        """A copy of this problem carrying ``payload`` instead of its own
+        per-instance data. Must be traceable (called under ``jax.vmap`` by
+        the batched tier); adapters implement it as a dataclass replace."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support batched execution "
+            f"(no with_payload)")
+
+    def batch_key(self) -> tuple:
+        """Hashable compatibility key: instances may share one batched
+        dispatch iff their keys are equal (same family, same shapes/dtypes,
+        same shared operands, same step count). The default is
+        conservative: shape/dtype of every payload leaf plus kind/name/
+        n_steps."""
+        leaves = jax.tree.leaves(self.payload())
+        return (self.kind, self.name, self.n_steps,
+                tuple((tuple(a.shape), str(a.dtype)) for a in leaves))
+
+    def array_scales_with_batch(self, name: str) -> bool:
+        """Whether the cacheable array ``name`` grows with batch size
+        (per-instance state) or is shared by every instance of a batch
+        (e.g. a common operator). Default: everything is per-instance."""
+        return True
 
     # -- tier hooks -----------------------------------------------------------
 

@@ -15,7 +15,6 @@ import dataclasses
 import itertools
 from typing import Sequence
 
-import jax.numpy as jnp
 
 
 @dataclasses.dataclass(frozen=True)

@@ -10,10 +10,8 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
-from repro.kernels import ref
-from repro.kernels.common import StencilSpec, get_spec
+from repro.kernels.common import StencilSpec
 from repro.kernels import stencil2d as _s2d
 from repro.kernels import spmv_ell as _spmv
 from repro.kernels import spmv_sell as _sell

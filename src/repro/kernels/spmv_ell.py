@@ -19,7 +19,6 @@ Mosaic for 32-bit types); the oracle in ``ref.py`` is identical math.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

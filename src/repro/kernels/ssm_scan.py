@@ -19,7 +19,6 @@ Oracle: ``repro.kernels.ref.ssm_scan`` (plain per-step recurrence).
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

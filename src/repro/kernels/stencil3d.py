@@ -12,17 +12,13 @@ VMEM next to the resident region.
 """
 from __future__ import annotations
 
-from typing import Optional
 
-import jax
 
 from repro.core.hardware import Chip, TPU_V5E
 from repro.kernels.common import StencilSpec
-from repro.kernels.stencil2d import (  # re-exported: rank-generic kernels
-    stencil_perks,
-    stencil_resident,
-    stencil_baseline_step,
-)
+# rank-generic kernels, re-exported so they stay importable from the 3D module
+from repro.kernels.stencil2d import stencil_perks, stencil_resident, stencil_baseline_step  # noqa: F401
+
 
 __all__ = [
     "stencil_perks",

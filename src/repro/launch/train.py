@@ -10,12 +10,11 @@ from __future__ import annotations
 
 import argparse
 
-import jax
 
 from repro.configs.registry import get_config, get_smoke_config
 from repro.data.pipeline import DataConfig
 from repro.dist import sharding as shd
-from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.launch.mesh import make_production_mesh
 from repro.models.lm import Model
 from repro.optim import adamw
 from repro.runtime.trainer import Trainer, TrainerConfig

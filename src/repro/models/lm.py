@@ -19,14 +19,13 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.nn import param as P
-from repro.nn import layers as L
 from repro.models import transformer, mamba2, hybrid, encdec
 
 _FAMILIES = {

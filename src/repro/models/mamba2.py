@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.nn.param import ParamSpec, is_spec
+from repro.nn.param import ParamSpec
 from repro.nn import layers as L
 from repro.nn.ssd import (ssd_chunked, ssd_step, causal_conv1d,
                           causal_conv1d_step)

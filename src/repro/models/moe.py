@@ -18,8 +18,6 @@ semantics); the load-balance auxiliary loss keeps routing near-uniform.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -107,7 +105,6 @@ def moe_apply(p, cfg: ModelConfig, x):
     """x (B, S, d) -> (y (B, S, d), aux scalar)."""
     b, s, d = x.shape
     rules = shd.active_rules()
-    m = cfg.moe
 
     shared = None
     if "shared" in p:
@@ -123,7 +120,6 @@ def moe_apply(p, cfg: ModelConfig, x):
 
     mesh = rules.mesh
     dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
-    ep = shd.mesh_axis_size(mesh, "model")
     n_local_tokens = (b * s) // max(1, _dp_size(mesh, dp))
     cap = _capacity(n_local_tokens, cfg)
 

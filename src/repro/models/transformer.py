@@ -12,7 +12,6 @@ activations 1/TP-degree sized.
 """
 from __future__ import annotations
 
-import functools
 import math
 from typing import Optional
 

@@ -21,7 +21,6 @@ cross-attention (``causal=False``, different Skv).
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

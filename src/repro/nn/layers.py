@@ -1,7 +1,6 @@
 """Core layers (pure functions over ParamSpec-described weights)."""
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -17,7 +17,7 @@ never sharded), None (replicated dim).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

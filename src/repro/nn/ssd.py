@@ -87,7 +87,6 @@ def causal_conv1d(x, w, bias=None):
 def causal_conv1d_step(state, xt, w, bias=None):
     """One decode step of the depthwise causal conv.
     state (B,K-1,C) holds the last K-1 inputs; xt (B,C)."""
-    k = w.shape[0]
     window = jnp.concatenate([state, xt[:, None, :]], axis=1)  # (B,K,C)
     out = jnp.einsum("bkc,kc->bc", window, w)
     if bias is not None:

@@ -1,0 +1,270 @@
+"""Multi-tenant solver serving: queue -> pack -> one persistent dispatch.
+
+The decode :class:`~repro.runtime.server.Engine` serves token requests by
+batching them through one persistent decode loop; this module is the same
+architecture for *solver* traffic. Users submit iterative problems (any
+:class:`~repro.exec.problem.Problem`); the service packs shape-compatible
+requests into :class:`~repro.exec.batch.BatchedProblem` batches, plans
+them under the B-scaled working set (``repro.exec.plan(batch=B)``),
+executes each batch through ONE dispatch per step chunk, and hands every
+request its own result plus queueing/latency/throughput stats.
+
+Packing policy (DESIGN.md §8):
+
+* requests are grouped by :meth:`Problem.batch_key` — family, shapes,
+  dtypes, shared operands, step count. Two requests with different keys
+  NEVER share a batch (a mixed batch would need two traced programs, i.e.
+  two dispatches — exactly what batching exists to avoid).
+* within a group, strict FIFO; across groups, the group owning the
+  oldest pending request is served first (no starvation).
+* a batch is padded up to ``max_batch`` by replicating its last instance
+  (``pad_to_max``), so every dispatch of a given key has the SAME shape:
+  the service builds each key's persistent runner ONCE and reuses it
+  (``_make_runner``), so steady-state batches pay dispatch, not
+  retrace/recompile, as traffic fluctuates. Padded lanes are dropped
+  before results are returned.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+
+from repro.core import perks
+from repro.exec.batch import BatchedProblem
+from repro.exec.executor import execute, honors_on_sync
+from repro.exec.plan import Plan
+from repro.exec.planner import plan_candidates
+from repro.exec.problem import Problem
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    """Serving knobs.
+
+    ``max_batch`` is the dispatch width B the planner prices; with
+    ``pad_to_max`` every batch is padded to exactly B instances so each
+    batch key owns one compiled program. ``chip`` feeds the planner;
+    ``autotune_top_k`` > 0 measures the top-k candidates per key instead
+    of trusting the projection (one-off cost per key, amortized across
+    every later batch of that key).
+    """
+
+    max_batch: int = 8
+    pad_to_max: bool = True
+    chip: Any = "tpu_v5e"
+    autotune_top_k: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestResult:
+    """One served request: its result plus the service-level telemetry."""
+
+    request_id: int
+    result: Any
+    queued_s: float          # submit -> batch dispatch start
+    latency_s: float         # submit -> result ready
+    exec_s: float            # wall time of the batch dispatch it rode in
+    batch_size: int          # real instances in that dispatch (pre-padding)
+    padded_to: int           # dispatch width after padding
+    plan: Plan               # the Plan the batch executed under
+
+
+@dataclasses.dataclass
+class _Pending:
+    request_id: int
+    problem: Problem
+    submitted_s: float
+
+
+class SolverService:
+    """Queue solver requests, serve them in planned batches.
+
+    >>> svc = SolverService(ServiceConfig(max_batch=8))
+    >>> rid = svc.submit(StencilProblem(x, spec, steps))
+    >>> results = svc.drain()          # {request_id: RequestResult}
+    """
+
+    def __init__(self, cfg: ServiceConfig = ServiceConfig(), *, mesh=None,
+                 clock=time.perf_counter):
+        self.cfg = cfg
+        self.mesh = mesh
+        self._clock = clock
+        self._queue: list[_Pending] = []
+        self._next_id = 0
+        # batch_key -> (chosen Plan, template problem pinning operand ids,
+        # steady-state runner or None); see _make_runner
+        self._plans: dict[tuple, tuple[Plan, Problem, Optional[Callable]]] = {}
+        self._served = 0
+        self._batches = 0
+        self._padded_lanes = 0
+        self._exec_s_total = 0.0
+        self._queued_s_total = 0.0
+        self._latency_s_total = 0.0
+
+    # -- intake ---------------------------------------------------------------
+
+    def submit(self, problem: Problem) -> int:
+        """Enqueue one problem instance; returns its request id."""
+        if isinstance(problem, BatchedProblem):
+            raise TypeError("submit single-instance problems; the service "
+                            "owns the batching")
+        rid = self._next_id
+        self._next_id += 1
+        self._queue.append(_Pending(rid, problem, self._clock()))
+        return rid
+
+    def pending(self) -> int:
+        return len(self._queue)
+
+    # -- packing --------------------------------------------------------------
+
+    def _take_batch(self) -> list[_Pending]:
+        """Up to ``max_batch`` requests sharing the OLDEST request's batch
+        key, FIFO order; everything else stays queued. Never mixes keys."""
+        if not self._queue:
+            raise ValueError("no queued requests")
+        key = self._queue[0].problem.batch_key()
+        taken, kept = [], []
+        for p in self._queue:
+            if len(taken) < self.cfg.max_batch and \
+                    p.problem.batch_key() == key:
+                taken.append(p)
+            else:
+                kept.append(p)
+        self._queue = kept
+        return taken
+
+    def _make_runner(self, bp: BatchedProblem,
+                     chosen: Plan) -> Optional[Callable]:
+        """ONE compiled runner per batch key for the loop tiers.
+
+        ``execute()`` builds a fresh ``jax.jit`` closure per call, which
+        re-traces/re-compiles on every batch — the padding policy exists
+        precisely so every dispatch of a key has identical shapes, so the
+        service builds the persistent runner once and reuses it (the
+        shared operands inside ``step_fn`` are identical by batch-key
+        construction). Problems with an ``on_sync`` callback rebuild per
+        batch (the callback closes over per-instance thresholds). The
+        resident tier reuses the module-level jitted kernel wrappers;
+        the distributed tier still rebuilds its ``shard_map`` program per
+        batch (its runners are constructed inside the tier hooks — a
+        known steady-state cost, not yet cached).
+        """
+        if chosen.tier not in ("host_loop", "device_loop"):
+            return None
+        if bp.on_sync() is not None:
+            return None
+        execution = (perks.Execution.HOST_LOOP
+                     if chosen.tier == "host_loop"
+                     else perks.Execution.DEVICE_LOOP)
+        cfg = perks.PerksConfig(execution=execution,
+                                sync_every=chosen.sync_every,
+                                fuse_steps=chosen.fuse_steps)
+        runner = perks.persistent(bp.step_fn(), bp.n_steps, cfg)
+        return lambda batch: batch.finalize(runner(batch.initial_state()))
+
+    def _plan_for(self, bp: BatchedProblem) -> tuple[Plan, Optional[Callable]]:
+        key = bp.batch_key()
+        cached = self._plans.get(key)
+        if cached is None:
+            cands = plan_candidates(bp, chip=self.cfg.chip, mesh=self.mesh)
+            # a service must honor a request's convergence contract: only
+            # candidates that can actually evaluate a declared on_sync
+            # check may be chosen (projection-ranked AND autotuned paths),
+            # never a marginally-faster plan that silently runs every step
+            if bp.on_sync() is not None:
+                honoring = [c for c in cands
+                            if honors_on_sync(c, bp.n_steps)]
+                cands = honoring or cands
+            if self.cfg.autotune_top_k > 0:
+                from repro.exec.executor import autotune
+                chosen = autotune(bp, cands, mesh=self.mesh,
+                                  top_k=self.cfg.autotune_top_k).best
+            else:
+                chosen = cands[0]
+            # the template rides along to pin the batch key's operand
+            # objects alive: id()s in the key can never be recycled while
+            # the plan cache maps them (one entry per operator ever
+            # served — bound it with evict_plans() if operators churn)
+            cached = (chosen, bp.template, self._make_runner(bp, chosen))
+            self._plans[key] = cached
+        return cached[0], cached[2]
+
+    # -- serving --------------------------------------------------------------
+
+    def run_batch(self) -> dict[int, RequestResult]:
+        """Serve one batch (the oldest key group) and return its results."""
+        taken = self._take_batch()
+        pad_to = self.cfg.max_batch if self.cfg.pad_to_max else None
+        bp = BatchedProblem.from_instances([p.problem for p in taken],
+                                           pad_to=pad_to)
+        chosen, runner = self._plan_for(bp)
+        t0 = self._clock()
+        if runner is not None:
+            result = jax.block_until_ready(runner(bp))
+        else:
+            result = jax.block_until_ready(execute(bp, chosen,
+                                                   mesh=self.mesh))
+        t1 = self._clock()
+        per_request = bp.split(result)
+
+        out: dict[int, RequestResult] = {}
+        for pend, res in zip(taken, per_request):
+            rr = RequestResult(
+                request_id=pend.request_id, result=res,
+                queued_s=t0 - pend.submitted_s,
+                latency_s=t1 - pend.submitted_s,
+                exec_s=t1 - t0, batch_size=len(taken), padded_to=bp.batch,
+                plan=chosen)
+            out[pend.request_id] = rr
+            self._queued_s_total += rr.queued_s
+            self._latency_s_total += rr.latency_s
+        self._served += len(taken)
+        self._batches += 1
+        self._padded_lanes += bp.pad
+        self._exec_s_total += t1 - t0
+        return out
+
+    def drain(self) -> dict[int, RequestResult]:
+        """Serve the whole queue, batch by batch."""
+        out: dict[int, RequestResult] = {}
+        while self._queue:
+            out.update(self.run_batch())
+        return out
+
+    # -- telemetry ------------------------------------------------------------
+
+    def stats(self) -> dict[str, float]:
+        served = max(1, self._served)
+        dispatched = self._served + self._padded_lanes
+        return {
+            "served": self._served,
+            "batches": self._batches,
+            "mean_batch_size": self._served / max(1, self._batches),
+            "pad_fraction": self._padded_lanes / max(1, dispatched),
+            "mean_queued_s": self._queued_s_total / served,
+            "mean_latency_s": self._latency_s_total / served,
+            "exec_s_total": self._exec_s_total,
+            "instances_per_s": self._served / max(1e-9, self._exec_s_total),
+            "distinct_plans": len(self._plans),
+        }
+
+    def chosen_plans(self) -> dict[tuple, Plan]:
+        """The Plan each batch key executed under (loggable artifacts)."""
+        return {k: entry[0] for k, entry in self._plans.items()}
+
+    def evict_plans(self) -> int:
+        """Drop every cached plan (and the operand pins that ride along).
+
+        Long-lived services whose operators churn call this periodically:
+        the plan cache pins each key's operand objects alive so that the
+        ``id()``\\ s inside batch keys can never be recycled into a
+        collision, which also means it grows by one entry per operator
+        ever served until evicted. Returns the number of entries dropped.
+        """
+        n = len(self._plans)
+        self._plans.clear()
+        return n

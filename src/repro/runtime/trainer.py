@@ -19,12 +19,10 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from pathlib import Path
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.ckpt import checkpoint as ckpt
 from repro.data.pipeline import DataConfig, synth_batch

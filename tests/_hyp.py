@@ -9,7 +9,7 @@ skip (keeping the rest of the module collectible and runnable), matching
 import pytest
 
 try:
-    from hypothesis import given, settings, strategies as st
+    from hypothesis import given, settings, strategies as st  # noqa: F401
     HAVE_HYPOTHESIS = True
 except ImportError:
     HAVE_HYPOTHESIS = False

@@ -1,11 +1,8 @@
 """Data-pipeline determinism (hypothesis) + checkpoint/restore/elastic."""
-import threading
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hyp import given, settings, st  # optional-dep shim (tests/_hyp.py)
 
 from repro.ckpt import checkpoint as ckpt

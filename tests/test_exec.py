@@ -20,7 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.hardware import CHIPS, TPU_V5E
+from repro.core.hardware import CHIPS
 from repro.exec import (
     CGProblem,
     CacheDecision,

@@ -13,9 +13,8 @@ from repro.core.cache_policy import (CacheableArray, gm_bytes_fused,
                                      cg_arrays, stencil_arrays,
                                      stencil_shard_arrays)
 from repro.core.hardware import A100, TPU_V5E
-from repro.core.perf_model import (project_perks, project_host_loop,
-                                   projected_speedup, gm_bytes_accessed,
-                                   efficiency)
+from repro.core.perf_model import (project_perks, projected_speedup,
+                                   gm_bytes_accessed, efficiency)
 from repro.kernels import ref
 from repro.kernels.common import get_spec
 

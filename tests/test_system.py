@@ -3,7 +3,6 @@ execution model, caching policies, HLO cost accounting, serving engine."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import hlo_costs
 from repro.kernels import ref

@@ -1,9 +1,7 @@
 """Trainer: loss goes down, checkpoint-restart survives injected failures,
 PERKS-fused multi-step dispatch matches per-step execution."""
 import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.registry import get_smoke_config
 from repro.data.pipeline import DataConfig
