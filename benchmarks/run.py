@@ -20,6 +20,10 @@ Prints ``name,us_per_call,derived`` CSV rows:
   batch_*           beyond-paper: batched multi-tenant execution — per-
                     instance time of one B-wide dispatch vs a sequential
                     per-user loop (DESIGN.md §8)
+  service_*         beyond-paper: continuous-batching async engine vs the
+                    static drain() path — steady-state per-instance
+                    throughput + p50/p99 latency under a Poisson arrival
+                    trace (DESIGN.md §9)
   decode_*          beyond-paper: persistent LM decode vs host loop
   train_fused_*     beyond-paper: K optimizer steps per dispatch
   roofline_*        §Roofline cells from the dry-run artifacts (if present)
@@ -41,8 +45,8 @@ import sys
 # the former puts benchmarks/ (not the repo root) on sys.path.
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
-SECTIONS = ("stencil", "fuse", "cg", "policy", "exec", "batch", "decode",
-            "train", "roofline")
+SECTIONS = ("stencil", "fuse", "cg", "policy", "exec", "batch", "service",
+            "decode", "train", "roofline")
 
 
 def _parse_sections(text: str) -> set[str]:
@@ -98,6 +102,9 @@ def main(argv=None) -> None:
         exec_bench.run(quick=quick, chip=chip)
     if "batch" in sections:
         geomeans["batch"] = batch_bench.run(quick=quick, chip=chip)
+    if "service" in sections:
+        from benchmarks import service_bench
+        geomeans["service"] = service_bench.run(quick=quick, chip=chip)
     if "decode" in sections:
         geomeans["decode"] = decode_bench.run(
             archs=("qwen2-0.5b", "mamba2-780m") if quick

@@ -1,0 +1,218 @@
+"""``service_*`` rows: continuous-batching async engine vs static drain().
+
+Two phases over the same mixed-key fleet (a tol-declaring CG operator
+plus a stencil family):
+
+* steady state — the whole fleet is queued up front; the static
+  :class:`SolverService` serves it with fixed-membership ``drain()``
+  batches (the PR 5 path: the slowest instance owns every lane's step
+  count, and convergence-checked keys rebuild their dispatch closure per
+  batch), the :class:`AsyncSolverService` serves it as lane groups with
+  per-lane early retirement and barrier-time backfill. Both sides are
+  warmed first (plans chosen, programs compiled), so the rows compare
+  steady-state serving cost, and ``service_speedup`` reports async
+  per-instance throughput over static — the row the CI gate asserts
+  stays >= 1.
+* arrival trace — the same requests replayed under a seeded Poisson
+  arrival process against both services; rows report p50/p99 queued and
+  end-to-end latency (the tail-latency story: a static batch blocks
+  late arrivals until the whole batch finishes, the engine admits them
+  at the next barrier).
+
+``--record PATH`` appends the measured numbers to ``BENCH_service.json``
+(the committed perf trajectory; see docs/BENCHMARKS.md).
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import sys
+import time
+
+# runnable directly (`python benchmarks/service_bench.py --record ...`)
+# as well as via benchmarks/run.py
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.util import row, time_fn
+from repro.core.hardware import TPU_V5E
+from repro.exec import CGProblem, StencilProblem
+from repro.kernels.common import get_spec
+from repro.runtime.solver_service import (
+    AsyncConfig,
+    AsyncSolverService,
+    ServiceConfig,
+    SolverService,
+)
+from repro.solvers.cg import load_dataset
+
+WIDTH = 8          # lane-group / batch width on both sides
+CG_ITERS = 400
+CG_TOL = 1e-8
+STENCIL_STEPS = 16
+
+
+def _fleet(quick: bool):
+    data, cols = load_dataset("poisson_64")
+    n_cg, n_st = (12, 4) if quick else (48, 16)
+    cg = [CGProblem.from_ell(
+        data, cols,
+        jax.random.normal(jax.random.key(i), (data.shape[0],), jnp.float32),
+        CG_ITERS, tol=CG_TOL) for i in range(n_cg)]
+    spec = get_spec("2d5pt")
+    st = [StencilProblem(
+        jax.random.normal(jax.random.key(100 + i), (32, 32), jnp.float32),
+        spec, STENCIL_STEPS) for i in range(n_st)]
+    # interleave so both services see mixed-key traffic
+    out = []
+    for i in range(max(n_cg, n_st)):
+        if i < n_cg:
+            out.append(cg[i])
+        if i < n_st:
+            out.append(st[i])
+    return out
+
+
+def _drain_static(svc: SolverService, fleet) -> float:
+    for p in fleet:
+        svc.submit(p)
+    t0 = time.perf_counter()
+    svc.drain()
+    return time.perf_counter() - t0
+
+
+def _drain_async(eng: AsyncSolverService, fleet) -> float:
+    for p in fleet:
+        eng.submit(p)
+    t0 = time.perf_counter()
+    eng.run_until_idle()
+    return time.perf_counter() - t0
+
+
+def _replay_static(svc: SolverService, trace) -> dict:
+    """Greedy static serving under an arrival trace: inject every due
+    arrival, then run one blocking batch; idle-sleep only when nothing
+    is pending."""
+    results = {}
+    trace = sorted(trace, key=lambda tp: tp[0])
+    i, t0 = 0, time.perf_counter()
+    while i < len(trace) or svc.pending():
+        now = time.perf_counter() - t0
+        while i < len(trace) and trace[i][0] <= now:
+            svc.submit(trace[i][1])
+            i += 1
+        if svc.pending():
+            results.update(svc.run_batch())
+        elif i < len(trace):
+            time.sleep(max(0.0, min(0.001,
+                                    trace[i][0] - (time.perf_counter() - t0))))
+    return results
+
+
+def _pctl(xs, q):
+    xs = sorted(xs)
+    return xs[max(1, math.ceil(q * len(xs))) - 1] if xs else 0.0
+
+
+def run(quick: bool = True, chip=TPU_V5E, record_path: str | None = None) -> float:
+    fleet = _fleet(quick)
+    chip_name = getattr(chip, "name", str(chip))
+
+    # -- steady state: full fleet queued up front ---------------------------
+    static = SolverService(ServiceConfig(max_batch=WIDTH, chip=chip_name))
+    engine = AsyncSolverService(AsyncConfig(max_batch=WIDTH, chip=chip_name))
+    _drain_static(static, fleet[:2])         # warm: plans + compiles
+    _drain_async(engine, fleet[:2])
+    t_static, _ = time_fn(lambda: _drain_static(static, fleet),
+                          warmup=0, iters=3)
+    t_async, _ = time_fn(lambda: _drain_async(engine, fleet),
+                         warmup=0, iters=3)
+    n = len(fleet)
+    st_stats, en_stats = static.stats(), engine.stats()
+    row("service_static_steady", t_static / n * 1e6,
+        f"instances_per_s={n / t_static:.1f};batches={st_stats['batches']};"
+        f"fleet={n};width={WIDTH};chip={chip_name}")
+    row("service_async_steady", t_async / n * 1e6,
+        f"instances_per_s={n / t_async:.1f};"
+        f"retired_early={en_stats['retired_early']};"
+        f"admitted_mid_solve={en_stats['admitted_mid_solve']};"
+        f"lane_occupancy={en_stats['lane_occupancy']:.2f};"
+        f"fleet={n};width={WIDTH};chip={chip_name}")
+    speedup = t_static / t_async
+    row("service_speedup", 0.0,
+        f"async_vs_static={speedup:.2f}x;fleet={n};width={WIDTH};"
+        f"chip={chip_name}")
+
+    # -- Poisson arrival trace: tail latency --------------------------------
+    import numpy as np
+    rng = np.random.default_rng(0)
+    n_trace = len(fleet) if quick else 2 * len(fleet)
+    mean_gap = (t_async / n) * 2.0           # ~half the serving rate
+    offsets = np.cumsum(rng.exponential(mean_gap, size=n_trace))
+    trace = list(zip(offsets.tolist(),
+                     (fleet[i % len(fleet)] for i in range(n_trace))))
+
+    st2 = SolverService(ServiceConfig(max_batch=WIDTH, chip=chip_name))
+    _drain_static(st2, fleet[:2])
+    st_res = _replay_static(st2, trace)
+    st_lat = [r.latency_s for r in st_res.values()]
+    st_q = [r.queued_s for r in st_res.values()]
+    row("service_static_trace", _pctl(st_lat, 0.5) * 1e6,
+        f"p50_latency_ms={_pctl(st_lat, 0.5) * 1e3:.2f};"
+        f"p99_latency_ms={_pctl(st_lat, 0.99) * 1e3:.2f};"
+        f"p50_queued_ms={_pctl(st_q, 0.5) * 1e3:.2f};"
+        f"p99_queued_ms={_pctl(st_q, 0.99) * 1e3:.2f};"
+        f"served={len(st_res)};rate_hz={1 / mean_gap:.1f};chip={chip_name}")
+
+    en2 = AsyncSolverService(AsyncConfig(max_batch=WIDTH, chip=chip_name))
+    _drain_async(en2, fleet[:2])             # warm (excluded from the rows)
+    en_res = en2.serve(trace)
+    en_lat = [r.latency_s for r in en_res.values()]
+    en_q = [r.queued_s for r in en_res.values()]
+    s = en2.stats()
+    row("service_async_trace", _pctl(en_lat, 0.5) * 1e6,
+        f"p50_latency_ms={_pctl(en_lat, 0.5) * 1e3:.2f};"
+        f"p99_latency_ms={_pctl(en_lat, 0.99) * 1e3:.2f};"
+        f"p50_queued_ms={_pctl(en_q, 0.5) * 1e3:.2f};"
+        f"p99_queued_ms={_pctl(en_q, 0.99) * 1e3:.2f};"
+        f"served={len(en_res)};admitted_mid_solve={s['admitted_mid_solve']};"
+        f"rate_hz={1 / mean_gap:.1f};chip={chip_name}")
+
+    if record_path:
+        entry = {
+            "fleet": n, "width": WIDTH, "chip": chip_name,
+            "quick": quick,
+            "async_vs_static_speedup": round(speedup, 3),
+            "static_per_instance_us": round(t_static / n * 1e6, 1),
+            "async_per_instance_us": round(t_async / n * 1e6, 1),
+            "async_retired_early": en_stats["retired_early"],
+            "async_p99_latency_ms":
+                round(_pctl(en_lat, 0.99) * 1e3, 2),
+            "static_p99_latency_ms":
+                round(_pctl(st_lat, 0.99) * 1e3, 2),
+        }
+        try:
+            history = json.load(open(record_path))
+        except (FileNotFoundError, json.JSONDecodeError):
+            history = []
+        history.append(entry)
+        with open(record_path, "w") as f:
+            json.dump(history, f, indent=2)
+            f.write("\n")
+
+    return speedup
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--record", default=None,
+                    help="append the measured point to this JSON history "
+                         "(benchmarks/BENCH_service.json)")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(quick=not args.full, record_path=args.record)

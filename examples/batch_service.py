@@ -5,7 +5,11 @@ users, each with a small stencil sweep or CG solve. This example builds a
 mixed queue (two stencil families + CG right-hand sides against one
 shared operator), lets ``SolverService`` pack it into shape-compatible
 batches, and prints the per-request telemetry and the per-key Plans —
-then compares batched against one-dispatch-per-user serving.
+then compares batched against one-dispatch-per-user serving, and
+finally serves a convergence-checked fleet through the
+continuous-batching ``AsyncSolverService`` (DESIGN.md §9), where
+converged lanes retire individually and late arrivals are admitted into
+the freed lanes mid-solve.
 
 Run:  PYTHONPATH=src python examples/batch_service.py [--users 24]
 """
@@ -19,7 +23,12 @@ import jax.numpy as jnp
 
 from repro.exec import CGProblem, Plan, StencilProblem, execute_sequential
 from repro.kernels.common import get_spec
-from repro.runtime.solver_service import ServiceConfig, SolverService
+from repro.runtime.solver_service import (
+    AsyncConfig,
+    AsyncSolverService,
+    ServiceConfig,
+    SolverService,
+)
 from repro.solvers.cg import load_dataset
 
 
@@ -82,6 +91,34 @@ def main(argv=None) -> None:
           f"({args.users / seq_s:.1f} instances/s) — batched is "
           f"{seq_s / max(stats['exec_s_total'], 1e-9):.1f}x on dispatch "
           f"wall time")
+
+    # -- continuous batching: churn membership, keep the program hot ----
+    data, cols = load_dataset("poisson_64")
+    eng = AsyncSolverService(AsyncConfig(max_batch=4, chunk_steps=25))
+    fleet = [CGProblem.from_ell(
+        data, cols,
+        jax.random.normal(jax.random.key(100 + i), (data.shape[0],),
+                          jnp.float32),
+        400, tol=1e-8) for i in range(4)]
+    for p in fleet:
+        eng.submit(p)
+    eng.step()                               # first barrier of the group
+    late = CGProblem.from_ell(
+        data, cols,
+        jax.random.normal(jax.random.key(999), (data.shape[0],),
+                          jnp.float32),
+        400, tol=1e-8)
+    eng.submit(late)                         # lands in a freed lane
+    out = eng.run_until_idle()
+    es = eng.stats()
+    print(f"\nasync engine: served {es['served']:.0f} tol-checked solves "
+          f"in {es['barriers']:.0f} barriers — "
+          f"{es['retired_early']:.0f} lanes retired early, "
+          f"{es['admitted_mid_solve']:.0f} admitted mid-solve")
+    steps = sorted(r.steps for r in out.values())
+    print(f"per-lane stop steps {steps} (a static batch would run every "
+          f"lane to {max(steps)}); p99 latency "
+          f"{es['p99_latency_s'] * 1e3:.1f} ms")
 
 
 if __name__ == "__main__":

@@ -98,19 +98,30 @@ def _own(state):
         lambda a: a.copy() if isinstance(a, jax.Array) else a, state)
 
 
-def host_loop(step_fn: StepFn, n_steps: int, *, donate: bool = True) -> Callable[[Any], Any]:
+def host_loop(
+    step_fn: StepFn,
+    n_steps: int,
+    *,
+    donate: bool = True,
+    on_sync: Optional[Callable[[Any, int], bool]] = None,
+) -> Callable[[Any], Any]:
     """Baseline execution: one device dispatch per time step.
 
     Mirrors the traditional CUDA pattern: kernel termination is the barrier,
-    and the domain is re-read from main memory at every step.
+    and the domain is re-read from main memory at every step. Every step IS
+    a host sync, so ``on_sync(state, k)`` — if given — is evaluated after
+    each one; returning True stops early (the baseline tier honors a
+    convergence contract at the finest possible cadence).
     """
     jitted = _jit_step(step_fn, donate)
 
     def run(state):
         if donate:
             state = _own(state)
-        for _ in range(n_steps):
+        for k in range(n_steps):
             state = jitted(state)
+            if on_sync is not None and on_sync(state, k + 1):
+                break
         return state
 
     return run
@@ -141,11 +152,12 @@ def device_loop(step_fn: StepFn, n_steps: int, *, donate: bool = True) -> Callab
 
 def chunked_loop(
     step_fn: StepFn,
-    n_steps: int,
+    n_steps: Optional[int],
     *,
     sync_every: int,
     donate: bool = True,
     on_sync: Optional[Callable[[Any, int], bool]] = None,
+    on_barrier: Optional[Callable[[Any, int], tuple[Any, bool]]] = None,
 ) -> Callable[[Any], Any]:
     """PERKS with periodic host synchronisation.
 
@@ -157,11 +169,39 @@ def chunked_loop(
     ``n_steps`` need not divide by ``sync_every``: the final dispatch fuses
     only the remaining steps, so the total is exactly ``n_steps`` (and the
     dispatch count is ceil(n_steps / sync_every)).
+
+    ``on_barrier(state, k) -> (state, stop)`` is the *scheduler* hook: unlike
+    ``on_sync`` it may REPLACE the state at the barrier (the continuous-
+    batching engine admits/retires lanes there), and it runs before
+    ``on_sync``. With ``n_steps=None`` the loop is open-ended — it runs one
+    fused chunk per barrier until ``on_barrier`` says stop (required in that
+    mode); the compiled chunk runner persists across every barrier, so
+    membership can churn while the dispatch stays hot.
     """
     # The loop below already owns `state` (one defensive copy at entry), so
     # the inner runners donate WITHOUT re-copying per dispatch — each chunk
     # updates the same buffers in place, as the persistent scheme intends.
     inner = _fused_runner(step_fn, sync_every, donate)
+
+    if n_steps is None:
+        if on_barrier is None:
+            raise ValueError(
+                "open-ended chunked_loop (n_steps=None) needs an on_barrier "
+                "scheduler callback to terminate it")
+
+        def run_open(state):
+            if donate:
+                state = _own(state)
+            done = 0
+            while True:
+                state = inner(state)
+                done += sync_every
+                state, stop = on_barrier(state, done)
+                if stop:
+                    return state
+
+        return run_open
+
     rem = n_steps % sync_every
     inner_rem = _fused_runner(step_fn, rem, donate) if rem else None
 
@@ -173,6 +213,10 @@ def chunked_loop(
             chunk = min(sync_every, n_steps - done)
             state = (inner if chunk == sync_every else inner_rem)(state)
             done += chunk
+            if on_barrier is not None:
+                state, stop = on_barrier(state, done)
+                if stop:
+                    break
             if on_sync is not None and on_sync(state, done):
                 break
         return state
@@ -206,7 +250,8 @@ def persistent(
                 step_fn, n_steps, sync_every=config.fuse_steps,
                 donate=config.donate, on_sync=on_sync,
             )
-        return host_loop(step_fn, n_steps, donate=config.donate)
+        return host_loop(step_fn, n_steps, donate=config.donate,
+                         on_sync=on_sync)
     if config.sync_every is not None and config.sync_every < n_steps:
         return chunked_loop(
             step_fn, n_steps, sync_every=config.sync_every,

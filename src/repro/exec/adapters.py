@@ -364,11 +364,15 @@ class CGProblem(Problem):
     def finalize(self, state):
         return state[0], state[3]
 
-    def on_sync(self):
+    def convergence(self):
+        # relative residual: ||r_k||^2 < tol * ||b||^2. The predicate is
+        # shared by every instance of the operator's batch key; only the
+        # threshold (a per-instance scalar derived from b) varies, so the
+        # batched tier checks all lanes in one stacked reduction.
         if self.tol is None:
             return None
-        thresh = self.tol * float(jnp.vdot(self.b, self.b))
-        return lambda s, k: float(s[3]) < thresh
+        thresh = self.tol * jnp.vdot(self.b, self.b)
+        return (lambda s, th: s[3] < th), thresh
 
     def cacheable_arrays(self, *, fuse_steps: int = 1) -> Sequence[CacheableArray]:
         if self.matrix is not None:

@@ -37,6 +37,7 @@ from typing import Any, Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.cache_policy import CacheableArray
 from repro.exec.problem import HaloSpec, Problem
@@ -111,10 +112,35 @@ class BatchedProblem(Problem):
         return jax.tree.map(lambda *ls: jnp.stack(ls),
                             *[p.oracle() for p in self.instances])
 
+    def convergence(self):
+        """The instances' shared predicate vmapped over the lane axis, with
+        every instance's params stacked: ``vec(state, params)`` is a
+        bool[B] lane vector from ONE device-side reduction. None if any
+        instance declares no contract."""
+        confs = [p.convergence() for p in self.instances]
+        if any(c is None for c in confs):
+            return None
+        pred = confs[0][0]  # structurally identical across the batch key
+        params = jax.tree.map(lambda *ls: jnp.stack([jnp.asarray(x)
+                                                     for x in ls]),
+                              *[c[1] for c in confs])
+        return jax.vmap(pred), params
+
     def on_sync(self) -> Optional[Callable[[Any, int], bool]]:
         """Batched convergence check: stop only when EVERY instance's own
         check passes (the batch shares one dispatch, so the slowest
-        instance owns the step count). None if any instance never stops."""
+        instance owns the step count). None if any instance never stops.
+
+        Problems with a traceable :meth:`Problem.convergence` contract are
+        checked with a single stacked all-lanes reduction — one device
+        dispatch and ONE host bool transfer per sync point, regardless of
+        B. Only legacy host-callback-only instances fall back to the
+        per-lane loop (B transfers per sync)."""
+        conv = self.convergence()
+        if conv is not None:
+            vec, params = conv
+            all_lanes = jax.jit(lambda s: jnp.all(vec(s, params)))
+            return lambda state, k: bool(all_lanes(state))
         cbs = [p.on_sync() for p in self.instances]
         if any(cb is None for cb in cbs):
             return None
@@ -192,6 +218,156 @@ class BatchedProblem(Problem):
         run = lambda pay: self.template.with_payload(pay).run_distributed(
             plan, mesh)
         return jax.vmap(run)(self.payload_stack)
+
+
+# -----------------------------------------------------------------------------
+# Lane-level batching: the substrate of the continuous-batching engine
+# -----------------------------------------------------------------------------
+
+def _lane_select(active, new, old):
+    """Per-leaf lane select: keep ``new`` where the lane is active, ``old``
+    otherwise; ``active`` is bool[B] broadcast over the trailing dims."""
+    mask = active.reshape(active.shape + (1,) * (new.ndim - 1))
+    return jnp.where(mask, new, old)
+
+
+@dataclasses.dataclass
+class LaneState:
+    """Device-side state of one lane group (width fixed at construction).
+
+    ``state`` is the stacked solver state (leading axis = lanes);
+    ``steps_done`` is int32[width] — a lane with ``steps_done >= n_steps``
+    is *frozen* (free or retired) and is masked out of every group step;
+    ``params`` is the stacked convergence-params pytree (None when the
+    family declares no contract).
+    """
+
+    state: Any
+    steps_done: jax.Array
+    params: Any = None
+
+
+class LaneRunner:
+    """Per-batch-key compiled lane programs for continuous batching.
+
+    Where :class:`BatchedProblem` stacks a *fixed* membership for one
+    dispatch sequence, a LaneRunner owns ``width`` lanes whose membership
+    churns: the engine admits a new instance into a free lane at a barrier
+    (:meth:`admit` — the mid-flight payload swap-in), advances every
+    occupied lane through the same masked group step (:meth:`step_fn`),
+    reads a per-lane convergence vector with ONE stacked reduction
+    (:meth:`convergence_vector`), and retires individually-converged lanes
+    early (:meth:`harvest` + :meth:`retire`) without disturbing the rest.
+
+    All jitted programs (group step chunks, admit, convergence vector) are
+    built once per runner and reused for the key's whole lifetime, so the
+    persistent dispatch stays hot while membership churns. Masking is what
+    makes heterogeneous progress safe inside one fused dispatch: a frozen
+    lane's step output is computed but discarded (``jnp.where`` select),
+    so an admitted lane that started 3 chunks late and a lane one step
+    from convergence ride the same program.
+    """
+
+    def __init__(self, template: Problem, width: int):
+        if isinstance(template, BatchedProblem):
+            raise TypeError("LaneRunner wants a single-instance template; "
+                            "it owns the lane stacking itself")
+        if width < 1:
+            raise ValueError(f"width must be >= 1, got {width}")
+        self.template = template
+        self.width = width
+        self.n_steps = int(template.n_steps)
+        self._vstep = jax.vmap(template.step_fn())
+        conv = template.convergence()
+        self.has_convergence = conv is not None
+        if self.has_convergence:
+            pred, _ = conv
+            self._conv_vec = jax.jit(jax.vmap(pred))
+        self._slice = jax.jit(lambda s, i: jax.tree.map(lambda a: a[i], s))
+
+        def _admit(state, steps, init, lane):
+            state = jax.tree.map(lambda grp, x: grp.at[lane].set(x),
+                                 state, init)
+            return state, steps.at[lane].set(0)
+
+        self._admit = jax.jit(_admit)
+        self._set_row = jax.jit(
+            lambda grp, x, lane: jax.tree.map(
+                lambda g, v: g.at[lane].set(v), grp, x))
+        self._freeze = jax.jit(
+            lambda steps, lane: steps.at[lane].set(self.n_steps))
+
+    # -- group stepping --------------------------------------------------------
+
+    def step_fn(self) -> Callable[[Any], Any]:
+        """Masked group step over the carry ``(state, steps_done)``: lanes
+        advance only while ``steps_done < n_steps``; frozen lanes keep
+        their state bit-for-bit (their computed update is discarded)."""
+        n, vstep = self.n_steps, self._vstep
+
+        def group_step(carry):
+            state, steps = carry
+            active = steps < n
+            new = vstep(state)
+            state = jax.tree.map(
+                lambda a, b: _lane_select(active, a, b), new, state)
+            return state, steps + active.astype(steps.dtype)
+
+        return group_step
+
+    # -- lane lifecycle --------------------------------------------------------
+
+    def fresh(self) -> LaneState:
+        """An all-free lane group: every lane holds a frozen replica of
+        the template's initial state (masked out until admitted), so the
+        group step is well-defined from the first chunk."""
+        init = self.template.initial_state()
+        state = jax.tree.map(lambda a: jnp.stack([a] * self.width), init)
+        steps = jnp.full((self.width,), self.n_steps, jnp.int32)
+        params = None
+        if self.has_convergence:
+            _, p = self.template.convergence()
+            params = jax.tree.map(
+                lambda a: jnp.stack([jnp.asarray(a)] * self.width), p)
+        return LaneState(state=state, steps_done=steps, params=params)
+
+    def admit(self, lanes: LaneState, lane: int, problem: Problem) -> LaneState:
+        """Swap ``problem``'s fresh state into a free lane mid-flight: the
+        lane's state row and convergence-params row are overwritten on
+        device and its step counter reset — no retrace, no recompile."""
+        if problem.batch_key() != self.template.batch_key():
+            raise ValueError(
+                f"cannot admit {problem.name}: batch key differs from this "
+                f"runner's template ({self.template.name})")
+        idx = jnp.int32(lane)
+        state, steps = self._admit(lanes.state, lanes.steps_done,
+                                   problem.initial_state(), idx)
+        params = lanes.params
+        if self.has_convergence:
+            _, p = problem.convergence()
+            params = self._set_row(params,
+                                   jax.tree.map(jnp.asarray, p), idx)
+        return LaneState(state=state, steps_done=steps, params=params)
+
+    def convergence_vector(self, lanes: LaneState):
+        """bool[width] of per-lane convergence — ONE stacked device-side
+        reduction and ONE host transfer, never a per-lane round trip.
+        None when the family declares no contract."""
+        if not self.has_convergence:
+            return None
+        return np.asarray(self._conv_vec(lanes.state, lanes.params))
+
+    def harvest(self, lanes: LaneState, lane: int):
+        """The finalized result of one lane (device slice + finalize)."""
+        return self.template.finalize(self._slice(lanes.state,
+                                                  jnp.int32(lane)))
+
+    def retire(self, lanes: LaneState, lane: int) -> LaneState:
+        """Freeze a lane (converged or exhausted): its counter jumps to
+        ``n_steps`` so the group step masks it out from now on."""
+        return dataclasses.replace(
+            lanes, steps_done=self._freeze(lanes.steps_done,
+                                           jnp.int32(lane)))
 
 
 def execute_sequential(problems: Sequence[Problem], plan, *, mesh=None) -> list:

@@ -11,6 +11,7 @@ legacy ``run_*`` surfaces one-line shims (DESIGN.md §7).
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 import warnings
 from typing import Optional, Sequence
@@ -72,12 +73,13 @@ def execute(problem: Problem, plan: Plan, *, mesh=None):
 
 def honors_on_sync(plan: Plan, n_steps: int) -> bool:
     """Whether this plan's execution path ever calls the problem's
-    ``on_sync`` callback (see ``core.perks.persistent``): HOST_LOOP only
-    chunks when fuse_steps > 1; DEVICE_LOOP only when sync_every < n;
-    the resident kernels and the distributed programs never return to
-    the host mid-run."""
+    ``on_sync`` callback (see ``core.perks.persistent``): HOST_LOOP is
+    back on the host after EVERY dispatch, so it always honors the check
+    (each step when fuse_steps == 1, each fused chunk otherwise);
+    DEVICE_LOOP only when sync_every < n; the resident kernels and the
+    distributed programs never return to the host mid-run."""
     if plan.tier == "host_loop":
-        return plan.fuse_steps > 1
+        return True
     if plan.tier == "device_loop":
         return plan.sync_every is not None and plan.sync_every < n_steps
     return False
@@ -95,9 +97,14 @@ class TimingRow:
     @property
     def prediction_ratio(self) -> Optional[float]:
         """measured / predicted — how far off the model was (CPU interpret
-        mode inflates this; the *ranking* is what transfers)."""
-        if not self.predicted_s:
+        mode inflates this; the *ranking* is what transfers). None only
+        when there IS no prediction; a predicted 0.0 is a real (if absurd)
+        projection and reports ``inf`` rather than masquerading as
+        "no prediction"."""
+        if self.predicted_s is None:
             return None
+        if self.predicted_s == 0.0:
+            return math.inf if self.measured_s > 0.0 else 1.0
         return self.measured_s / self.predicted_s
 
 

@@ -189,9 +189,12 @@ def _cg_candidates(problem, chip: Chip, mesh, *, shard_axis: str,
     cplan = pol["_plan"]
     n = problem.n_steps
     if sync_every is None and problem.on_sync() is not None and n > 1:
-        # the problem declares a convergence check (tol); loop-tier plans
-        # need host-sync points to evaluate it — default to the usual
-        # check cadence, capped so at least one check lands before the end
+        # the problem declares a convergence check (tol); DEVICE_LOOP plans
+        # need host-sync points to evaluate it — default to the usual check
+        # cadence, capped so at least one check lands before the end.
+        # host_loop is back on the host after every dispatch and honors the
+        # check natively (executor.honors_on_sync), so the cadence rides
+        # along there purely as documentation of the check interval.
         sync_every = min(25, max(1, n - 1))
 
     total_bytes = sum(a.bytes * (a.loads_per_step + a.stores_per_step)

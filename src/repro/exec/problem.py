@@ -79,10 +79,32 @@ class Problem(abc.ABC):
         """Map the final loop state to the user-facing result."""
         return state
 
+    def convergence(self) -> Optional[tuple[Callable[[Any, Any], Any], Any]]:
+        """Traceable convergence contract: ``(pred, params)``.
+
+        ``pred(state, params)`` is a *pure, traceable* predicate returning
+        a boolean scalar (True = this instance is converged) and ``params``
+        is the pytree of per-instance arrays it consumes (e.g. the CG
+        threshold ``tol * ||b||^2``). The predicate must be structurally
+        identical across every instance of a batch key — only ``params``
+        varies — so the batched tier can evaluate ALL lanes with ONE
+        stacked ``vmap(pred)`` reduction, and the continuous-batching
+        engine can swap a lane's check by swapping its params row.
+        None = no convergence check (run all steps)."""
+        return None
+
     def on_sync(self) -> Optional[Callable[[Any, int], bool]]:
         """Host-sync callback for chunked execution (e.g. CG convergence);
-        returning True stops early. None = run all steps."""
-        return None
+        returning True stops early. None = run all steps.
+
+        Defaults to evaluating :meth:`convergence` on-device (ONE
+        device->host bool transfer per sync point); override only for
+        checks that cannot be expressed as a traceable predicate."""
+        conv = self.convergence()
+        if conv is None:
+            return None
+        pred, params = conv
+        return lambda state, k: bool(pred(state, params))
 
     def halo_spec(self) -> Optional[HaloSpec]:
         """Partition description for the distributed tier (None = cannot

@@ -23,6 +23,20 @@ Packing policy (DESIGN.md §8):
   (``_make_runner``), so steady-state batches pay dispatch, not
   retrace/recompile, as traffic fluctuates. Padded lanes are dropped
   before results are returned.
+
+:class:`SolverService` batches have *fixed membership*: a late arrival
+waits out the whole running batch, and a convergence-checked batch runs
+until its slowest instance converges. :class:`AsyncSolverService`
+(bottom of this module) removes both limits with continuous batching
+(DESIGN.md §9): each batch key owns a persistent
+:class:`~repro.exec.batch.LaneRunner` lane group; at every host-sync
+barrier the scheduler retires individually-converged lanes (one vmapped
+convergence reduction — the vector doubles as the retirement mask) and
+admits waiting same-key requests into the freed lanes mid-solve, while
+the compiled group program stays hot. Admission is bounded-queue with
+``reject``/``shed`` overload policy and an optional queue-wait SLA;
+``stats()`` adds p50/p99 queued/latency/exec percentiles and the
+scheduling counters.
 """
 from __future__ import annotations
 
@@ -33,7 +47,7 @@ from typing import Any, Callable, Optional
 import jax
 
 from repro.core import perks
-from repro.exec.batch import BatchedProblem
+from repro.exec.batch import BatchedProblem, LaneRunner, LaneState
 from repro.exec.executor import execute, honors_on_sync
 from repro.exec.plan import Plan
 from repro.exec.planner import plan_candidates
@@ -64,12 +78,17 @@ class RequestResult:
 
     request_id: int
     result: Any
-    queued_s: float          # submit -> batch dispatch start
+    queued_s: float          # submit -> picked off the queue (PURE queue time)
     latency_s: float         # submit -> result ready
-    exec_s: float            # wall time of the batch dispatch it rode in
+    exec_s: float            # wall time of the dispatch(es) it rode in
     batch_size: int          # real instances in that dispatch (pre-padding)
     padded_to: int           # dispatch width after padding
     plan: Plan               # the Plan the batch executed under
+    plan_s: float = 0.0      # planning/autotune time this request waited on
+    #                          (exactly 0.0 on a warm key — cold-key cost is
+    #                          never smeared into queued_s)
+    steps: Optional[int] = None  # steps actually executed for this request
+    #                          (async engine; None = not tracked per lane)
 
 
 @dataclasses.dataclass
@@ -103,6 +122,7 @@ class SolverService:
         self._exec_s_total = 0.0
         self._queued_s_total = 0.0
         self._latency_s_total = 0.0
+        self._plan_s_total = 0.0
 
     # -- intake ---------------------------------------------------------------
 
@@ -166,10 +186,17 @@ class SolverService:
         runner = perks.persistent(bp.step_fn(), bp.n_steps, cfg)
         return lambda batch: batch.finalize(runner(batch.initial_state()))
 
-    def _plan_for(self, bp: BatchedProblem) -> tuple[Plan, Optional[Callable]]:
+    def _plan_for(self, bp: BatchedProblem) -> tuple[Plan, Optional[Callable],
+                                                     float]:
+        """The key's plan + steady-state runner, and the planning seconds
+        spent on THIS call — measured here, inside the plan cache, so a
+        warm key reports exactly 0.0 and run_batch can report cold-key
+        planning/autotune as ``plan_s`` instead of smearing it into
+        ``queued_s`` (cold-key queue metrics used to lie)."""
         key = bp.batch_key()
         cached = self._plans.get(key)
         if cached is None:
+            t_plan = self._clock()
             cands = plan_candidates(bp, chip=self.cfg.chip, mesh=self.mesh)
             # a service must honor a request's convergence contract: only
             # candidates that can actually evaluate a declared on_sync
@@ -191,17 +218,21 @@ class SolverService:
             # served — bound it with evict_plans() if operators churn)
             cached = (chosen, bp.template, self._make_runner(bp, chosen))
             self._plans[key] = cached
-        return cached[0], cached[2]
+            plan_s = self._clock() - t_plan
+            self._plan_s_total += plan_s
+            return cached[0], cached[2], plan_s
+        return cached[0], cached[2], 0.0
 
     # -- serving --------------------------------------------------------------
 
     def run_batch(self) -> dict[int, RequestResult]:
         """Serve one batch (the oldest key group) and return its results."""
         taken = self._take_batch()
+        t_q = self._clock()   # queue time ends when the batch is picked up
         pad_to = self.cfg.max_batch if self.cfg.pad_to_max else None
         bp = BatchedProblem.from_instances([p.problem for p in taken],
                                            pad_to=pad_to)
-        chosen, runner = self._plan_for(bp)
+        chosen, runner, plan_s = self._plan_for(bp)
         t0 = self._clock()
         if runner is not None:
             result = jax.block_until_ready(runner(bp))
@@ -215,10 +246,10 @@ class SolverService:
         for pend, res in zip(taken, per_request):
             rr = RequestResult(
                 request_id=pend.request_id, result=res,
-                queued_s=t0 - pend.submitted_s,
+                queued_s=t_q - pend.submitted_s,
                 latency_s=t1 - pend.submitted_s,
                 exec_s=t1 - t0, batch_size=len(taken), padded_to=bp.batch,
-                plan=chosen)
+                plan=chosen, plan_s=plan_s)
             out[pend.request_id] = rr
             self._queued_s_total += rr.queued_s
             self._latency_s_total += rr.latency_s
@@ -248,6 +279,7 @@ class SolverService:
             "mean_queued_s": self._queued_s_total / served,
             "mean_latency_s": self._latency_s_total / served,
             "exec_s_total": self._exec_s_total,
+            "plan_s_total": self._plan_s_total,
             "instances_per_s": self._served / max(1e-9, self._exec_s_total),
             "distinct_plans": len(self._plans),
         }
@@ -268,3 +300,446 @@ class SolverService:
         n = len(self._plans)
         self._plans.clear()
         return n
+
+
+# -----------------------------------------------------------------------------
+# Continuous-batching async engine
+# -----------------------------------------------------------------------------
+
+class ServiceOverloaded(RuntimeError):
+    """Raised by :meth:`AsyncSolverService.submit` when the bounded queue
+    is full and the overload policy is ``"reject"``."""
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncConfig:
+    """Knobs of the continuous-batching engine.
+
+    ``max_batch`` is the lane-group width (the dispatch width every key's
+    compiled programs are built for). ``chunk_steps`` overrides the steps
+    fused per barrier (default: the chosen plan's ``sync_every``, else
+    ``ceil(n_steps / 4)`` so every request sees a few admission/retirement
+    opportunities). ``max_queue`` bounds the waiting queue — backpressure;
+    on overflow the ``overload`` policy either rejects the NEW submission
+    (:class:`ServiceOverloaded`) or sheds the OLDEST waiting request (the
+    one least likely to still meet its SLA). ``sla_queued_s`` is the queue
+    -wait SLA: under ``"shed"`` a request whose wait already exceeds it is
+    dropped at admission time instead of occupying a lane; under
+    ``"reject"`` it is still served but counted in ``sla_misses``.
+    """
+
+    max_batch: int = 8
+    chunk_steps: Optional[int] = None
+    max_queue: int = 1024
+    overload: str = "reject"            # "reject" | "shed"
+    sla_queued_s: Optional[float] = None
+    chip: Any = "tpu_v5e"
+
+    def __post_init__(self):
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        if self.max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {self.max_queue}")
+        if self.overload not in ("reject", "shed"):
+            raise ValueError(
+                f"overload must be 'reject' or 'shed', got {self.overload!r}")
+
+
+@dataclasses.dataclass
+class _Program:
+    """One batch key's compiled lane programs — built once, reused across
+    every group activation of the key (the persistent dispatch stays hot
+    while membership churns)."""
+
+    template: Problem
+    plan: Plan
+    chunk: int
+    runner: "LaneRunner"
+    drive: Callable          # open-ended chunked_loop over the group step
+    plan_s: float            # planning cost, charged to the cold activation
+
+
+@dataclasses.dataclass
+class _Lane:
+    """Host-side mirror of one device lane."""
+
+    pending: Optional[_Pending] = None   # None = free
+    steps: int = 0                       # host mirror of steps_done[lane]
+    admitted_s: float = 0.0
+    plan_s: float = 0.0
+
+
+@dataclasses.dataclass
+class _Group:
+    """The active lane group: one key's lanes currently being driven."""
+
+    key: tuple
+    prog: _Program
+    lanes: "LaneState"
+    slots: list[_Lane]
+    plan_s: float            # cold-activation planning cost (0.0 when warm)
+    barriers: int = 0
+
+
+class AsyncSolverService:
+    """Continuous-batching solver serving: lanes churn, the dispatch stays.
+
+    The static :class:`SolverService` is batch-synchronous: it packs a
+    batch, runs it to completion, and only then looks at the queue again —
+    the slowest instance owns every lane's step count, and a request that
+    arrives one step after a dispatch waits out the whole batch. This
+    engine is the vLLM-style move applied to iterative solvers: each batch
+    key owns a lane group of width ``max_batch`` advanced chunk-by-chunk
+    through ONE persistent compiled program
+    (:class:`~repro.exec.batch.LaneRunner`); at every host-sync barrier
+    the scheduler
+
+    * reads a per-lane convergence vector (ONE stacked device reduction,
+      one host transfer — never B round trips),
+    * retires individually-converged or exhausted lanes early (their
+      result is harvested and the lane masked out),
+    * admits newly-submitted same-key requests into the freed lanes
+      mid-solve (a device-side row swap — no retrace, no recompile).
+
+    Requests are admitted under backpressure (bounded queue, reject-or-
+    shed) and every served request carries queued/latency/exec telemetry;
+    :meth:`stats` reports p50/p99.
+
+    ``step()`` advances the engine by exactly one barrier (deterministic —
+    the unit tests drive it with a fake clock); ``run_until_idle()`` and
+    ``serve(trace)`` keep the group's buffers resident across barriers by
+    driving the open-ended chunked loop until the group drains.
+
+    >>> eng = AsyncSolverService(AsyncConfig(max_batch=8))
+    >>> rid = eng.submit(CGProblem.from_ell(data, cols, b, 500, tol=1e-8))
+    >>> results = eng.run_until_idle()     # {request_id: RequestResult}
+    """
+
+    def __init__(self, cfg: AsyncConfig = AsyncConfig(), *,
+                 clock=time.perf_counter):
+        self.cfg = cfg
+        self._clock = clock
+        self._queue: list[_Pending] = []
+        self._next_id = 0
+        self._programs: dict[tuple, _Program] = {}
+        self._group: Optional[_Group] = None
+        self._retired_now: dict[int, RequestResult] = {}
+        self._quantum: Optional[int] = None   # barriers left in this drive
+        self._trace: Optional[list] = None    # (offset_s, problem) replay
+        self._trace_i = 0
+        self._trace_t0 = 0.0
+        # telemetry
+        self._served = 0
+        self._groups_activated = 0
+        self._barriers = 0
+        self._admitted_mid_solve = 0
+        self._retired_early = 0
+        self._rejected = 0
+        self._shed = 0
+        self._shed_ids: list[int] = []
+        self._sla_misses = 0
+        self._busy_s = 0.0
+        self._occupied_lane_barriers = 0
+        self._queued: list[float] = []
+        self._latencies: list[float] = []
+        self._execs: list[float] = []
+
+    # -- intake ----------------------------------------------------------------
+
+    def submit(self, problem: Problem) -> int:
+        """Enqueue one problem under backpressure; returns its request id.
+
+        When the bounded queue is full: ``overload="reject"`` raises
+        :class:`ServiceOverloaded` (the caller owns retry/backoff);
+        ``overload="shed"`` drops the OLDEST waiting request to make room
+        — it has already waited longest, so it is the least likely to
+        still meet a queue-wait SLA.
+        """
+        if isinstance(problem, BatchedProblem):
+            raise TypeError("submit single-instance problems; the engine "
+                            "owns the lane batching")
+        if len(self._queue) >= self.cfg.max_queue:
+            if self.cfg.overload == "reject":
+                self._rejected += 1
+                raise ServiceOverloaded(
+                    f"queue full ({self.cfg.max_queue} waiting); "
+                    f"resubmit after draining or use overload='shed'")
+            dropped = self._queue.pop(0)
+            self._shed += 1
+            self._shed_ids.append(dropped.request_id)
+        rid = self._next_id
+        self._next_id += 1
+        self._queue.append(_Pending(rid, problem, self._clock()))
+        return rid
+
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def shed_ids(self) -> list[int]:
+        """Request ids dropped by the shed policy (no result will come)."""
+        return list(self._shed_ids)
+
+    # -- planning / program cache ----------------------------------------------
+
+    def _program_for(self, template: Problem) -> _Program:
+        key = template.batch_key()
+        prog = self._programs.get(key)
+        if prog is not None:
+            return prog
+        t_plan = self._clock()
+        width = self.cfg.max_batch
+        cands = plan_candidates(template, chip=self.cfg.chip, batch=width)
+        # the engine's barriers ARE device_loop sync points: prefer the
+        # best device_loop candidate (fused chunks between host syncs);
+        # any plan is only advisory here — the lane group always runs as
+        # a chunked device loop so admission/retirement points exist.
+        loop = [c for c in cands if c.tier == "device_loop"]
+        chosen = (loop or cands)[0]
+        n = int(template.n_steps)
+        chunk = (self.cfg.chunk_steps or chosen.sync_every
+                 or max(1, -(-n // 4)))
+        chunk = max(1, min(chunk, n))
+        plan = dataclasses.replace(chosen, tier="device_loop",
+                                   sync_every=chunk, batch=width)
+        runner = LaneRunner(template, width)
+        drive = perks.chunked_loop(runner.step_fn(), None, sync_every=chunk,
+                                   on_barrier=self._barrier)
+        prog = _Program(template=template, plan=plan, chunk=chunk,
+                        runner=runner, drive=drive,
+                        plan_s=self._clock() - t_plan)
+        self._programs[key] = prog
+        return prog
+
+    def evict_programs(self) -> int:
+        """Drop every cached lane program (and its operand pins)."""
+        if self._group is not None:
+            raise RuntimeError("cannot evict programs while a group is "
+                               "active; run_until_idle() first")
+        n = len(self._programs)
+        self._programs.clear()
+        return n
+
+    # -- scheduler --------------------------------------------------------------
+
+    def _activate(self) -> None:
+        """Spin up a lane group for the oldest waiting request's key and
+        admit as many same-key requests as fit."""
+        template = self._queue[0].problem
+        prog = self._program_for(template)
+        plan_s, prog.plan_s = prog.plan_s, 0.0   # charge planning once
+        g = _Group(key=template.batch_key(), prog=prog,
+                   lanes=prog.runner.fresh(),
+                   slots=[_Lane() for _ in range(prog.runner.width)],
+                   plan_s=plan_s)
+        self._group = g
+        self._groups_activated += 1
+        self._admit_waiting(g)
+
+    def _admit_waiting(self, g: _Group) -> None:
+        free = [i for i, s in enumerate(g.slots) if s.pending is None]
+        if not free:
+            return
+        kept = []
+        for p in self._queue:
+            if free and p.problem.batch_key() == g.key:
+                now = self._clock()
+                wait = now - p.submitted_s
+                sla = self.cfg.sla_queued_s
+                if sla is not None and wait > sla:
+                    if self.cfg.overload == "shed":
+                        # already blew its queue-wait SLA: a lane spent on
+                        # it is a lane taken from a request that can still
+                        # meet its own — drop it here, at admission
+                        self._shed += 1
+                        self._shed_ids.append(p.request_id)
+                        continue
+                    self._sla_misses += 1
+                lane = free.pop(0)
+                slot = g.slots[lane]
+                slot.pending = p
+                slot.steps = 0
+                slot.admitted_s = now
+                slot.plan_s = g.plan_s if g.barriers == 0 else 0.0
+                g.lanes = g.prog.runner.admit(g.lanes, lane, p.problem)
+                if g.barriers > 0:
+                    self._admitted_mid_solve += 1
+            else:
+                kept.append(p)
+        self._queue = kept
+
+    def _retire_lane(self, g: _Group, lane: int, now: float,
+                     batch_size: int) -> None:
+        slot = g.slots[lane]
+        pend = slot.pending
+        result = jax.block_until_ready(g.prog.runner.harvest(g.lanes, lane))
+        rr = RequestResult(
+            request_id=pend.request_id, result=result,
+            queued_s=slot.admitted_s - pend.submitted_s,
+            latency_s=now - pend.submitted_s,
+            exec_s=now - slot.admitted_s,
+            batch_size=batch_size, padded_to=g.prog.runner.width,
+            plan=g.prog.plan, plan_s=slot.plan_s, steps=slot.steps)
+        self._retired_now[pend.request_id] = rr
+        self._served += 1
+        if slot.steps < g.prog.runner.n_steps:
+            self._retired_early += 1
+        self._queued.append(rr.queued_s)
+        self._latencies.append(rr.latency_s)
+        self._execs.append(rr.exec_s)
+        slot.pending = None
+        g.lanes = g.prog.runner.retire(g.lanes, lane)
+
+    def _barrier(self, carry, done) -> tuple:
+        """The scheduler, run at every host-sync barrier of the active
+        group: fold the advanced carry back in, retire converged/exhausted
+        lanes, admit waiting same-key requests into the freed lanes, then
+        decide whether the drive loop keeps going."""
+        g = self._group
+        g.lanes = dataclasses.replace(g.lanes, state=carry[0],
+                                      steps_done=carry[1])
+        g.barriers += 1
+        self._barriers += 1
+        self._inject_due_arrivals()
+        now = self._clock()
+        n = g.prog.runner.n_steps
+        occupied = [i for i, s in enumerate(g.slots) if s.pending is not None]
+        self._occupied_lane_barriers += len(occupied)
+        conv = g.prog.runner.convergence_vector(g.lanes)
+        for i in occupied:
+            slot = g.slots[i]
+            slot.steps = min(slot.steps + g.prog.chunk, n)
+            if slot.steps >= n or (conv is not None and bool(conv[i])):
+                self._retire_lane(g, i, now, batch_size=len(occupied))
+        self._admit_waiting(g)
+        if not any(s.pending is not None for s in g.slots):
+            self._group = None               # group drained; program stays
+            return (g.lanes.state, g.lanes.steps_done), True
+        if self._quantum is not None:
+            self._quantum -= 1
+            if self._quantum <= 0:
+                return (g.lanes.state, g.lanes.steps_done), True
+        return (g.lanes.state, g.lanes.steps_done), False
+
+    def _drive(self, quantum: Optional[int]) -> None:
+        g = self._group
+        self._quantum = quantum
+        t0 = self._clock()
+        carry = g.prog.drive((g.lanes.state, g.lanes.steps_done))
+        self._busy_s += self._clock() - t0
+        if self._group is g:                 # paused, not drained
+            g.lanes = dataclasses.replace(g.lanes, state=carry[0],
+                                          steps_done=carry[1])
+
+    # -- serving ---------------------------------------------------------------
+
+    def step(self) -> dict[int, RequestResult]:
+        """Advance the engine by exactly ONE barrier (activating a group
+        first if needed); returns the requests retired at that barrier.
+        Deterministic given a deterministic clock — the unit of testing.
+        """
+        self._retired_now = {}
+        if self._group is None:
+            if not self._queue:
+                return {}
+            self._activate()
+        self._drive(quantum=1)
+        return self._retired_now
+
+    def run_until_idle(self) -> dict[int, RequestResult]:
+        """Serve everything currently queued (plus anything admitted while
+        serving), group by group, keeping each group's buffers resident
+        across barriers; returns every request retired during the call."""
+        out: dict[int, RequestResult] = {}
+        while self._queue or self._group is not None:
+            self._retired_now = {}
+            if self._group is None:
+                self._activate()
+            self._drive(quantum=None)        # run until the group drains
+            out.update(self._retired_now)
+        return out
+
+    def serve(self, trace, *, sleep=time.sleep,
+              poll_s: float = 0.001) -> dict[int, RequestResult]:
+        """Replay an arrival trace ``[(offset_s, problem), ...]`` against
+        the engine: each problem is submitted once the engine's clock
+        passes ``offset_s`` (arrivals land mid-solve, at barriers), lane
+        groups run continuously while work exists, and the engine sleeps
+        only when idle before the next arrival. Returns every served
+        request's result; shed/rejected requests are absent (see
+        :meth:`shed_ids` / ``stats()['rejected']``).
+        """
+        out: dict[int, RequestResult] = {}
+        self._trace = sorted(trace, key=lambda tp: tp[0])
+        self._trace_i = 0
+        self._trace_t0 = self._clock()
+        try:
+            while (self._trace_i < len(self._trace) or self._queue
+                   or self._group is not None):
+                self._inject_due_arrivals()
+                if self._group is None and not self._queue:
+                    nxt = (self._trace[self._trace_i][0]
+                           - (self._clock() - self._trace_t0))
+                    if nxt > 0:
+                        sleep(min(nxt, poll_s))
+                    continue
+                self._retired_now = {}
+                if self._group is None:
+                    self._activate()
+                self._drive(quantum=None)
+                out.update(self._retired_now)
+        finally:
+            self._trace = None
+        return out
+
+    def _inject_due_arrivals(self) -> None:
+        if self._trace is None:
+            return
+        now = self._clock() - self._trace_t0
+        while (self._trace_i < len(self._trace)
+               and self._trace[self._trace_i][0] <= now):
+            _, problem = self._trace[self._trace_i]
+            self._trace_i += 1
+            try:
+                self.submit(problem)
+            except ServiceOverloaded:
+                pass                         # counted in stats()['rejected']
+
+    # -- telemetry -------------------------------------------------------------
+
+    def stats(self) -> dict[str, float]:
+        """Engine counters plus p50/p99 queued/latency/exec percentiles."""
+        width = self.cfg.max_batch
+        out = {
+            "served": self._served,
+            "groups": self._groups_activated,
+            "barriers": self._barriers,
+            "admitted_mid_solve": self._admitted_mid_solve,
+            "retired_early": self._retired_early,
+            "rejected": self._rejected,
+            "shed": self._shed,
+            "sla_misses": self._sla_misses,
+            "distinct_programs": len(self._programs),
+            "lane_occupancy": (self._occupied_lane_barriers
+                               / max(1, self._barriers * width)),
+            "busy_s": self._busy_s,
+            "instances_per_s": self._served / max(1e-9, self._busy_s),
+        }
+        for name, xs in (("queued", self._queued),
+                         ("latency", self._latencies),
+                         ("exec", self._execs)):
+            out[f"p50_{name}_s"] = _percentile(xs, 0.50)
+            out[f"p99_{name}_s"] = _percentile(xs, 0.99)
+            out[f"mean_{name}_s"] = sum(xs) / max(1, len(xs))
+        return out
+
+    def chosen_plans(self) -> dict[tuple, Plan]:
+        return {k: prog.plan for k, prog in self._programs.items()}
+
+
+def _percentile(xs: list, q: float) -> float:
+    """Nearest-rank percentile (0.0 for an empty sample)."""
+    if not xs:
+        return 0.0
+    xs = sorted(xs)
+    rank = max(1, int(-(-q * len(xs) // 1)))   # ceil without floats drift
+    return xs[min(len(xs), rank) - 1]

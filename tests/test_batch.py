@@ -118,6 +118,91 @@ def test_batched_cg_early_stop_converges_all_instances():
         assert float(rr[i]) < 1e-10 * float(jnp.vdot(b, b)) * 10
 
 
+def test_batched_on_sync_is_one_stacked_reduction(monkeypatch):
+    """The batched convergence check must evaluate ALL lanes with one
+    device-side vmapped reduction — the per-instance host callbacks are
+    never invoked (previously: B host transfers per sync point)."""
+    data, cols = cgs.load_dataset("poisson_64")
+    bs = [jax.random.normal(jax.random.key(60 + i), (data.shape[0],),
+                            jnp.float32) for i in range(B)]
+    insts = [CGProblem.from_ell(data, cols, b, 500, tol=1e-10) for b in bs]
+    bp = BatchedProblem.from_instances(insts)
+
+    def _boom(self):
+        raise AssertionError("per-instance on_sync must not be consulted")
+
+    monkeypatch.setattr(CGProblem, "on_sync", _boom)
+    vec, params = bp.convergence()
+    lane_vec = vec(bp.initial_state(), params)
+    assert lane_vec.shape == (B,) and lane_vec.dtype == jnp.bool_
+    check = bp.on_sync()
+    assert check(bp.initial_state(), 0) is False
+    x, rr = execute(bp, Plan(tier="device_loop", sync_every=25, batch=B))
+    for i, b in enumerate(bs):
+        assert float(rr[i]) < 1e-10 * float(jnp.vdot(b, b)) * 10
+
+
+def test_lane_runner_retirement_bit_exact_vs_sequential():
+    """LaneRunner's masked group step with staggered admission and
+    per-lane early retirement computes exactly what each instance
+    computes alone under the same chunked device loop."""
+    from repro.exec.batch import LaneRunner
+
+    data, cols = cgs.load_dataset("poisson_64")
+    chunk, n = 5, 400
+    insts = [CGProblem.from_ell(
+        data, cols,
+        jax.random.normal(jax.random.key(70 + i), (data.shape[0],),
+                          jnp.float32), n, tol=1e-8) for i in range(3)]
+    runner = LaneRunner(insts[0], width=4)
+    lanes = runner.fresh()
+    group = jax.jit(runner.step_fn())
+    lanes = runner.admit(lanes, 0, insts[0])
+    lanes = runner.admit(lanes, 2, insts[1])
+    admitted_at = {0: 0, 2: 0}
+    done = {}
+    barrier = 0
+    while len(done) < 3:
+        carry = (lanes.state, lanes.steps_done)
+        for _ in range(chunk):
+            carry = group(carry)
+        lanes = dataclasses.replace(lanes, state=carry[0],
+                                    steps_done=carry[1])
+        barrier += 1
+        conv = runner.convergence_vector(lanes)
+        for lane, inst_i in ((0, 0), (2, 1), (1, 2)):
+            if inst_i in done or lane not in admitted_at:
+                continue
+            steps = min((barrier - admitted_at[lane]) * chunk, n)
+            if bool(conv[lane]) or steps >= n:
+                done[inst_i] = (runner.harvest(lanes, lane), steps)
+                lanes = runner.retire(lanes, lane)
+                if 2 not in done and 1 not in admitted_at:
+                    # mid-flight swap-in: instance 2 takes the freed lane 1
+                    lanes = runner.admit(lanes, 1, insts[2])
+                    admitted_at[1] = barrier
+    for i, inst in enumerate(insts):
+        want = execute(inst, Plan(tier="device_loop", sync_every=chunk))
+        got, steps = done[i]
+        assert steps < n                     # all retired early
+        for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_lane_runner_rejects_incompatible_admission():
+    from repro.exec.batch import LaneRunner
+
+    insts, bp = _stencil_batch("2d5pt")
+    runner = LaneRunner(insts[0], width=2)
+    other = StencilProblem(
+        jax.random.normal(jax.random.key(9), (24, 32), jnp.float32),
+        get_spec("2d5pt"), STEPS)            # same family, wrong shape
+    with pytest.raises(ValueError, match="batch key"):
+        runner.admit(runner.fresh(), 0, other)
+    with pytest.raises(TypeError, match="single-instance"):
+        LaneRunner(bp, width=2)
+
+
 # -- batched oracle / split / padding -------------------------------------------
 
 def test_batched_oracle_and_split_shapes():

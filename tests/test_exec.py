@@ -278,6 +278,47 @@ def test_declared_convergence_check_is_planned_and_honored():
         execute(problem, Plan(tier="device_loop"))   # check dropped
 
 
+def test_host_loop_honors_declared_convergence():
+    """The baseline tier syncs every step, so a tol-declaring CG problem
+    early-stops there WITHOUT a drop-warning, and matches the manual
+    per-step loop with the same check bit-for-bit."""
+    from repro.exec.executor import honors_on_sync
+
+    data, cols = cgs.load_dataset("poisson_64")
+    b = jax.random.normal(jax.random.key(7), (data.shape[0],), jnp.float32)
+    problem = CGProblem.from_ell(data, cols, b, 500, tol=1e-10)
+    assert honors_on_sync(Plan(tier="host_loop"), 500)
+    assert honors_on_sync(Plan(tier="host_loop", fuse_steps=4), 500)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", RuntimeWarning)
+        x, rr = execute(problem, Plan(tier="host_loop"))
+    # reference: the same step/check cadence, hand-rolled
+    step = jax.jit(problem.step_fn())
+    check = problem.on_sync()
+    state = problem.initial_state()
+    for k in range(500):
+        state = step(state)
+        if check(state, k + 1):
+            break
+    assert k + 1 < 500                       # it really stopped early
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(state[0]))
+    assert float(rr) == float(state[3])
+
+
+def test_prediction_ratio_none_vs_zero():
+    """predicted_s=None means NO prediction (ratio None); predicted_s=0.0
+    is a real prediction and must not be swallowed by a falsy check."""
+    import math
+
+    from repro.exec.executor import TimingRow
+
+    p = Plan(tier="host_loop")
+    assert TimingRow(p, None, 0.5).prediction_ratio is None
+    assert TimingRow(p, 0.0, 0.5).prediction_ratio == math.inf
+    assert TimingRow(p, 0.0, 0.0).prediction_ratio == 1.0
+    assert TimingRow(p, 0.25, 0.5).prediction_ratio == pytest.approx(2.0)
+
+
 def test_executor_rejects_mismatched_plan():
     spec = get_spec("2d5pt")
     x = _domain(spec)

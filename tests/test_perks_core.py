@@ -64,6 +64,61 @@ def test_chunked_loop_non_dividing_runs_exact_step_count():
     assert calls == [3, 6, 7]
 
 
+def test_host_loop_on_sync_checks_every_step():
+    """The baseline tier is back on the host after EVERY dispatch, so a
+    convergence callback fires each step and stops the loop early."""
+    calls = []
+    run = perks.host_loop(lambda s: s + 1, 100, donate=False,
+                          on_sync=lambda s, k: calls.append(k) or s >= 3)
+    out = run(jnp.int32(0))
+    assert int(out) == 3
+    assert calls == [1, 2, 3]
+
+
+def test_persistent_host_loop_threads_on_sync():
+    """persistent() must not drop on_sync on the fuse_steps=1 HOST_LOOP
+    path (the hole that made convergence-declared problems run all
+    n_steps on the baseline tier)."""
+    syncs = []
+    cfg = perks.PerksConfig(execution=perks.Execution.HOST_LOOP)
+    run = perks.persistent(lambda s: s + 1, 10, cfg,
+                           on_sync=lambda s, k: syncs.append(k) or s >= 4)
+    assert int(run(jnp.int32(0))) == 4
+    assert syncs == [1, 2, 3, 4]
+
+
+def test_chunked_on_barrier_can_replace_state_and_stop():
+    """The scheduler hook may rewrite the state at a barrier (lane
+    admission/retirement) and owns termination in open-ended mode."""
+    seen = []
+
+    def barrier(state, k):
+        seen.append((int(state), k))
+        if k >= 6:
+            return state, True
+        return state * 10, False           # scheduler swaps the state
+
+    run = perks.chunked_loop(lambda s: s + 1, None, sync_every=2,
+                             donate=False, on_barrier=barrier)
+    out = run(jnp.int32(0))
+    # chunks: 0+2=2 -> swap 20 -> 20+2=22 -> swap 220 -> 220+2=222 stop
+    assert seen == [(2, 2), (22, 4), (222, 6)]
+    assert int(out) == 222
+    with pytest.raises(ValueError, match="on_barrier"):
+        perks.chunked_loop(lambda s: s + 1, None, sync_every=2)
+
+
+def test_chunked_on_barrier_runs_before_on_sync_in_bounded_mode():
+    order = []
+    run = perks.chunked_loop(
+        lambda s: s + 1, 9, sync_every=3, donate=False,
+        on_barrier=lambda s, k: order.append(("barrier", k)) or (s, False),
+        on_sync=lambda s, k: order.append(("sync", k)) or s >= 6)
+    assert int(run(jnp.int32(0))) == 6
+    assert order == [("barrier", 3), ("sync", 3),
+                     ("barrier", 6), ("sync", 6)]
+
+
 def test_scan_loop_collects_outputs():
     step = lambda s, _: (s * 2, s)
     final, outs = perks.scan_loop(step, 4, donate=False)(jnp.float32(1.0))

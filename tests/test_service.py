@@ -224,6 +224,29 @@ def test_autotuned_service_also_respects_convergence_checks():
     assert honors_on_sync(results[tol_rid].plan, 500)
 
 
+def test_cold_vs_warm_key_plan_time_is_separated():
+    """Planning/autotune time is reported as plan_s on the COLD batch and
+    is exactly 0.0 on warm batches — never smeared into queued_s (the
+    old behavior folded it into every cold rider's queue time)."""
+    ticks = iter(range(10**6))
+    svc = SolverService(ServiceConfig(max_batch=2),
+                        clock=lambda: float(next(ticks)))
+    cold = [svc.submit(_stencil("2d5pt", i)) for i in range(2)]
+    warm = [svc.submit(_stencil("2d5pt", 10 + i)) for i in range(2)]
+    results = svc.drain()
+    for rid in cold:
+        rr = results[rid]
+        assert rr.plan_s > 0.0
+        # queued time ends at batch pickup, BEFORE planning: with the
+        # tick clock, latency strictly exceeds queue + plan + exec only
+        # by the pickup/packing instants, never the other way round
+        assert rr.latency_s >= rr.queued_s + rr.plan_s + rr.exec_s
+    for rid in warm:
+        assert results[rid].plan_s == 0.0
+        assert results[rid].queued_s >= 0.0
+    assert svc.stats()["plan_s_total"] == results[cold[0]].plan_s
+
+
 def test_plan_cache_pins_operator_objects():
     """The plan cache holds the template problem, so the operand ids
     inside cached batch keys cannot be garbage-collected and recycled."""
