@@ -30,7 +30,7 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 import jax
 import jax.numpy as jnp
 
-from repro.exec import CGProblem, StencilProblem, plan
+from repro.exec import BiCGStabProblem, CGProblem, GMRESProblem, StencilProblem, plan
 from repro.kernels.common import get_spec
 
 _HERE = os.path.dirname(os.path.abspath(__file__))
@@ -51,6 +51,10 @@ CGS = (
     (65_536, 8, 200),
     (1_048_576, 16, 100),
 )
+# Krylov family (DESIGN.md §10): one BiCGStab and one GMRES(m) portfolio
+# entry each, projected on abstract operands like the CG rows
+BICGSTAB = ((65_536, 8, 100),)
+GMRES = ((65_536, 8, 16, 6),)  # (n, k, m, cycles)
 BATCHES = (1, 8)
 
 
@@ -74,6 +78,27 @@ def current_projections() -> dict[str, float]:
         for b in BATCHES:
             chosen = plan(problem, batch=b)
             out[f"cg_n{n}_k{k}_i{iters}_b{b}"] = chosen.predicted_s
+    for n, k, iters in BICGSTAB:
+        problem = BiCGStabProblem(
+            b=jax.ShapeDtypeStruct((n,), jnp.float32),
+            n_steps=iters,
+            data=jax.ShapeDtypeStruct((n, k), jnp.float32),
+            cols=None,
+        )
+        for b in BATCHES:
+            chosen = plan(problem, batch=b)
+            out[f"bicgstab_n{n}_k{k}_i{iters}_b{b}"] = chosen.predicted_s
+    for n, k, m, cycles in GMRES:
+        problem = GMRESProblem(
+            b=jax.ShapeDtypeStruct((n,), jnp.float32),
+            n_steps=cycles,
+            m=m,
+            data=jax.ShapeDtypeStruct((n, k), jnp.float32),
+            cols=None,
+        )
+        for b in BATCHES:
+            chosen = plan(problem, batch=b)
+            out[f"gmres_n{n}_k{k}_m{m}_c{cycles}_b{b}"] = chosen.predicted_s
     return out
 
 

@@ -1,0 +1,173 @@
+"""Krylov-family benches (DESIGN.md §10): BiCGStab, GMRES(m), s-step CG,
+mixed precision — the paper's CG story generalized.
+
+Row families (schema in docs/BENCHMARKS.md):
+
+``krylov_bicgstab_<name>`` — per nonsymmetric registry dataset: host loop
+vs device loop vs the fused resident kernel (VEC: vectors resident, A
+streamed twice per iteration; MIX: A resident too), plus the planner's
+chosen tier.
+
+``krylov_gmres_<name>`` — restarted GMRES(m): device loop vs the
+VMEM-resident cycle kernel (Arnoldi basis pinned for the cycle), with
+the basis footprint the planner prices.
+
+``krylov_sstep_psums`` — the communication contract, counted in traced
+jaxprs on a one-device mesh (symbolic: collective counts don't depend on
+device count): textbook CG = 2 psums/iter, pipelined = 1, BiCGStab
+textbook = 5 vs pipelined = 3, GMRES = 3m+2 per cycle, s-step CG = ONE
+per s iterations. The CI gate asserts the s-step reduction.
+
+``krylov_mixed_<name>`` — Plan.precision sweep: uniform vs mixed
+(compensated reductions) per-iteration cost, plus the iterative-
+refinement residual improvement (solve_refined).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.util import time_fn, row
+from repro.core.hardware import TPU_V5E
+
+ITERS = 20
+CYCLES = 2
+M = 16
+
+
+def _count_psum(jx, mult=1):
+    n = 0
+    for eqn in jx.eqns:
+        if eqn.primitive.name == "psum":
+            n += mult
+        m = (mult * eqn.params["length"]
+             if eqn.primitive.name == "scan" else mult)
+        for v in eqn.params.values():
+            for s in (v if isinstance(v, (tuple, list)) else (v,)):
+                inner = getattr(s, "jaxpr", s)
+                if hasattr(inner, "eqns"):
+                    n += _count_psum(inner, m)
+    return n
+
+
+def run(quick: bool = False, chip=TPU_V5E):
+    from repro.exec import (BiCGStabProblem, CGProblem, GMRESProblem, Plan,
+                            execute, plan, solve_refined)
+    from repro.exec.adapters import cg_distributed, fused_block_rows
+    from repro.exec.krylov import (bicgstab_distributed, cg_sstep_distributed,
+                                   gmres_distributed)
+    from repro.dist.mesh import make_mesh
+    from repro.sparse.generate import generate, nonsymmetric_names
+
+    names = ["convdiff_small"] if quick else nonsymmetric_names()
+    iters = 10 if quick else ITERS
+    speedups = []
+
+    ells = {}
+
+    def operator(name):
+        if name not in ells:
+            ell = generate(name).to_ell()
+            ells[name] = (jnp.asarray(ell.data), jnp.asarray(ell.cols))
+        return ells[name]
+
+    # -- BiCGStab tier sweep on the nonsymmetric suite ------------------------
+    for name in names:
+        data, cols = operator(name)
+        n = data.shape[0]
+        bm = fused_block_rows(n)
+        b = jax.random.normal(jax.random.key(1), (n,), jnp.float32)
+        prob = BiCGStabProblem.from_ell(data, cols, b, iters)
+        t_host, _ = time_fn(lambda: execute(prob, Plan(tier="host_loop")),
+                            warmup=1, iters=3)
+        t_dev, _ = time_fn(lambda: execute(prob, Plan(tier="device_loop")),
+                           warmup=1, iters=3)
+        t_vec, _ = time_fn(
+            lambda: execute(prob, Plan(tier="resident", policy="VEC",
+                                       block_rows=bm)), warmup=1, iters=3)
+        t_mix, _ = time_fn(
+            lambda: execute(prob, Plan(tier="resident", policy="MIX",
+                                       block_rows=bm)), warmup=1, iters=3)
+        chosen = plan(prob)
+        meas = t_host / t_dev
+        speedups.append(meas)
+        row(f"krylov_bicgstab_{name}", t_dev / iters * 1e6,
+            f"host_us={t_host / iters * 1e6:.1f};speedup={meas:.2f}x;"
+            f"vec_us={t_vec / iters * 1e6:.1f};"
+            f"mix_us={t_mix / iters * 1e6:.1f};"
+            f"planned_tier={chosen.tier};policy={chosen.policy}")
+
+    # -- GMRES(m): loop vs the VMEM-resident cycle kernel ---------------------
+    for name in names:
+        data, cols = operator(name)
+        n = data.shape[0]
+        b = jax.random.normal(jax.random.key(1), (n,), jnp.float32)
+        gprob = GMRESProblem.from_ell(data, cols, b, CYCLES, m=M)
+        t_dev, _ = time_fn(lambda: execute(gprob, Plan(tier="device_loop")),
+                           warmup=1, iters=3)
+        t_res, _ = time_fn(lambda: execute(gprob, Plan(tier="resident")),
+                           warmup=1, iters=3)
+        basis_kib = (M + 1) * n * 4 / 1024
+        meas = t_dev / t_res
+        speedups.append(max(meas, 1.0 / meas))
+        row(f"krylov_gmres_{name}", t_res / CYCLES * 1e6,
+            f"loop_us={t_dev / CYCLES * 1e6:.1f};"
+            f"resident_us={t_res / CYCLES * 1e6:.1f};m={M};"
+            f"basis_kib={basis_kib:.0f};resident_vs_loop={meas:.2f}x")
+
+    # -- collective counts (symbolic; one-device mesh) ------------------------
+    data, cols = operator(names[0])
+    b = jnp.ones((data.shape[0],), jnp.float32)
+    mesh = make_mesh((jax.device_count(),), ("data",))
+    s = 4
+    cnt = {}
+    cnt["cg_textbook"] = _count_psum(jax.make_jaxpr(
+        lambda b: cg_distributed(data, cols, b, iters, mesh,
+                                 fuse_reductions=False))(b).jaxpr)
+    cnt["cg_pipelined"] = _count_psum(jax.make_jaxpr(
+        lambda b: cg_distributed(data, cols, b, iters, mesh,
+                                 fuse_reductions=True))(b).jaxpr)
+    cnt["cg_sstep"] = _count_psum(jax.make_jaxpr(
+        lambda b: cg_sstep_distributed(data, cols, b, iters, mesh,
+                                       s=s))(b).jaxpr)
+    cnt["bicgstab_textbook"] = _count_psum(jax.make_jaxpr(
+        lambda b: bicgstab_distributed(data, cols, b, iters, mesh,
+                                       fuse_reductions=False))(b).jaxpr)
+    cnt["bicgstab_pipelined"] = _count_psum(jax.make_jaxpr(
+        lambda b: bicgstab_distributed(data, cols, b, iters, mesh,
+                                       fuse_reductions=True))(b).jaxpr)
+    cnt["gmres"] = _count_psum(jax.make_jaxpr(
+        lambda b: gmres_distributed(data, cols, b, CYCLES, M,
+                                    mesh))(b).jaxpr)
+    row("krylov_sstep_psums", 0.0,
+        f"iters={iters};s={s};" + ";".join(f"{k}={v}" for k, v in
+                                           sorted(cnt.items())))
+
+    # -- mixed precision: compensated reductions + iterative refinement -------
+    # (CG on an SPD operator — refinement re-solves against the residual,
+    # which only contracts when the inner solver converges)
+    spd = generate("poisson2d_small").to_ell()
+    data, cols = jnp.asarray(spd.data), jnp.asarray(spd.cols)
+    n = data.shape[0]
+    b = jax.random.normal(jax.random.key(2), (n,), jnp.float32)
+    cg = CGProblem.from_ell(data, cols, b, iters)
+    t_uni, (x_u, rr_u) = time_fn(
+        lambda: execute(cg, Plan(tier="device_loop")), warmup=1, iters=3)
+    t_mixed, (x_m, rr_m) = time_fn(
+        lambda: execute(cg, Plan(tier="device_loop", precision="mixed")),
+        warmup=1, iters=3)
+    _, rr_ref = solve_refined(cg, Plan(tier="device_loop",
+                                       precision="mixed"), rounds=2)
+    bb = float(jnp.vdot(b, b))
+    row("krylov_mixed_poisson2d_small", t_mixed / iters * 1e6,
+        f"uniform_us={t_uni / iters * 1e6:.1f};"
+        f"mixed_us={t_mixed / iters * 1e6:.1f};"
+        f"overhead={t_mixed / t_uni:.2f}x;"
+        f"rr_uniform={float(rr_u) / bb:.3e};"
+        f"rr_mixed={float(rr_m) / bb:.3e};"
+        f"rr_refined={float(rr_ref) / bb:.3e}")
+
+    gm = float(np.exp(np.mean(np.log(speedups))))
+    row("krylov_geomean", 0.0, f"speedup={gm:.2f}x")
+    return gm

@@ -10,6 +10,10 @@ Prints ``name,us_per_call,derived`` CSV rows:
                     sweep + planner policy + ELL/SELL fill ratios)
   cg_format_*       beyond-paper: SELL-C-σ vs ELL CG on irregular data
   cg_*              Fig. 7  (legacy synthetic suite, host vs PERKS)
+  krylov_*          beyond-paper: the Krylov family (DESIGN.md §10) —
+                    BiCGStab/GMRES(m) tier sweeps on the nonsymmetric
+                    registry, collective counts (textbook vs pipelined vs
+                    s-step), mixed-precision overhead + refinement
   where_cache_*     Fig. 8  (where/how much to cache sweep)
   what_cache_*      Fig. 9  (what to cache: CG policy matrix)
   concurrency_*     Table II (occupancy/working-set analog)
@@ -45,8 +49,8 @@ import sys
 # the former puts benchmarks/ (not the repo root) on sys.path.
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
-SECTIONS = ("stencil", "fuse", "cg", "policy", "exec", "batch", "service",
-            "decode", "train", "roofline")
+SECTIONS = ("stencil", "fuse", "cg", "krylov", "policy", "exec", "batch",
+            "service", "decode", "train", "roofline")
 
 
 def _parse_sections(text: str) -> set[str]:
@@ -94,6 +98,9 @@ def main(argv=None) -> None:
         stencil_bench.run_fused(quick=quick)
     if "cg" in sections:
         geomeans["cg"] = cg_bench.run(quick=quick, chip=chip)
+    if "krylov" in sections:
+        from benchmarks import krylov_bench
+        geomeans["krylov"] = krylov_bench.run(quick=quick, chip=chip)
     if "policy" in sections:
         policy_bench.run_where(chip=chip)
         policy_bench.run_what(chip=chip)

@@ -251,3 +251,67 @@ def cg_arrays_for(matrix) -> list[CacheableArray]:
     its real cost and spuriously evict the vectors).
     """
     return cg_arrays(matrix.shape[0], matrix.nnz, matrix.data.dtype.itemsize)
+
+
+def bicgstab_arrays(n_rows: int, nnz: int, dtype_bytes: int,
+                    index_bytes: int = 4) -> list[CacheableArray]:
+    """Cacheable arrays of one BiCGStab iteration (DESIGN.md §10).
+
+    Seven working vectors instead of CG's four, and the matrix streams
+    TWICE per iteration (v = A p, then t = A s), which doubles A's traffic
+    density relative to CG — on small operators the planner now prefers
+    pinning A over the colder vectors (x, rhat), the inverse of the CG
+    ranking. Per iteration (see ``kernels.ref.bicgstab_iteration_matvec``):
+    r feeds the rho dot, the p update and the s axpy (3 loads, 1 store);
+    s feeds t = A s, two stabilization dots and the x/r updates (3/1);
+    p is rebuilt and consumed by the SpMV and the x update (3/1); rhat is
+    read by two dots and never written; v and t are produced once and
+    read twice; x accumulates.
+    """
+    vec = n_rows * dtype_bytes
+    return [
+        CacheableArray("r", vec, 3.0, 1.0),
+        CacheableArray("s", vec, 3.0, 1.0),
+        CacheableArray("p", vec, 3.0, 1.0),
+        CacheableArray("v", vec, 2.0, 1.0),
+        CacheableArray("t", vec, 2.0, 1.0),
+        CacheableArray("rhat", vec, 2.0, 0.0),
+        CacheableArray("x", vec, 1.0, 1.0),
+        CacheableArray("A", nnz * (dtype_bytes + index_bytes), 2.0, 0.0),
+    ]
+
+
+def bicgstab_arrays_for(matrix) -> list[CacheableArray]:
+    """``bicgstab_arrays`` from a ``repro.sparse`` container (true nnz)."""
+    return bicgstab_arrays(matrix.shape[0], matrix.nnz,
+                           matrix.data.dtype.itemsize)
+
+
+def gmres_arrays(n_rows: int, m: int, nnz: int, dtype_bytes: int,
+                 index_bytes: int = 4) -> list[CacheableArray]:
+    """Cacheable arrays of one GMRES(m) cycle, normalized per inner
+    Arnoldi step (DESIGN.md §10).
+
+    The headline entry is the basis V — (m+1) vectors that every inner
+    step reads twice (the two CGS2 projection passes) and extends once.
+    Keeping V on-chip is the PERKS story for GMRES: a cycle that fits
+    never round-trips the basis through HBM, which is exactly the traffic
+    the restart length m is usually tuned to limit. A streams once per
+    inner SpMV; w (the candidate vector) is built, projected twice and
+    normalized; x/r only move at cycle boundaries (1/m per inner step,
+    rounded to the planner's coarse 1.0 — they are small next to V).
+    """
+    vec = n_rows * dtype_bytes
+    return [
+        CacheableArray("V", (m + 1) * vec, 2.0, 1.0),
+        CacheableArray("w", vec, 3.0, 1.0),
+        CacheableArray("r", vec, 1.0, 1.0),
+        CacheableArray("x", vec, 1.0, 1.0),
+        CacheableArray("A", nnz * (dtype_bytes + index_bytes), 1.0, 0.0),
+    ]
+
+
+def gmres_arrays_for(matrix, m: int) -> list[CacheableArray]:
+    """``gmres_arrays`` from a ``repro.sparse`` container (true nnz)."""
+    return gmres_arrays(matrix.shape[0], m, matrix.nnz,
+                        matrix.data.dtype.itemsize)

@@ -21,6 +21,11 @@ One solver-agnostic pipeline behind every iterative workload:
   ``runtime/solver_service.py`` serves heterogeneous request queues
   through it.
 
+* The Krylov family (``krylov.py``, DESIGN.md §10) — BiCGStab, restarted
+  GMRES(m) and s-step CG as Problem adapters, with mixed precision as a
+  Plan dimension (``precision.py``): every tier, the batched dispatch and
+  the async service serve them with zero solver-specific code.
+
 The legacy ``solvers/stencil.py`` and ``solvers/cg.py`` surfaces are
 thin deprecated shims over this package.
 """
@@ -30,6 +35,7 @@ from repro.exec.adapters import (
     fused_block_rows,
     fusion_schedule,
     make_distributed_step,
+    operator_fingerprint,
 )
 from repro.exec.batch import (
     BatchedProblem,
@@ -37,16 +43,31 @@ from repro.exec.batch import (
     execute_sequential,
 )
 from repro.exec.executor import AutotuneResult, TimingRow, autotune, execute
+from repro.exec.krylov import (
+    BiCGStabProblem,
+    GMRESProblem,
+    cg_sstep_distributed,
+    cg_sstep_run,
+)
 from repro.exec.plan import TIERS, CacheDecision, Plan
 from repro.exec.planner import plan, plan_candidates
-from repro.exec.problem import HaloSpec, Problem
+from repro.exec.precision import (
+    PRECISIONS,
+    compensated_vdot,
+    dot_for,
+    solve_refined,
+)
+from repro.exec.problem import HaloSpec, Problem, operand_fingerprint
 
 __all__ = [
     "AutotuneResult",
     "BatchedProblem",
+    "BiCGStabProblem",
     "CGProblem",
     "CacheDecision",
+    "GMRESProblem",
     "HaloSpec",
+    "PRECISIONS",
     "Plan",
     "Problem",
     "StencilProblem",
@@ -54,11 +75,18 @@ __all__ = [
     "TimingRow",
     "autotune",
     "autotune_batch_sweep",
+    "cg_sstep_distributed",
+    "cg_sstep_run",
+    "compensated_vdot",
+    "dot_for",
     "execute",
     "execute_sequential",
     "fused_block_rows",
     "fusion_schedule",
     "make_distributed_step",
+    "operand_fingerprint",
+    "operator_fingerprint",
     "plan",
     "plan_candidates",
+    "solve_refined",
 ]

@@ -32,10 +32,39 @@ from repro.core.cache_policy import (
 )
 from repro.dist.collectives import axis_size, halo_exchange
 from repro.dist.sharding import smap
-from repro.exec.problem import HaloSpec, Problem
+from repro.exec.precision import PRECISIONS, dot_for
+from repro.exec.problem import HaloSpec, Problem, operand_fingerprint
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 from repro.kernels.common import StencilSpec
+
+
+def operator_fingerprint(data, cols, matrix, matvec) -> str:
+    """Operand fingerprint of one sparse operator, preferring content (ELL
+    planes, then the exact container's values) over identity (an opaque
+    matvec callable). Folded into Krylov problem ``name``s so two
+    same-size problems over different operators never alias in the
+    plan/runner caches."""
+    if data is not None:
+        return operand_fingerprint(data, cols)
+    if matrix is not None:
+        return operand_fingerprint(getattr(matrix, "data", None))
+    return operand_fingerprint(matvec)
+
+
+def _operand_sig(a):
+    """id + shape/dtype of one shared operand (batch-key component).
+
+    Batch keys pair the id with the content fingerprint: the id catches
+    in-place-distinct operators instantly, the shapes keep a recycled id
+    from colliding across differently-shaped operands, and the
+    fingerprint catches equal-shaped different-valued operators whose
+    storage was freed and its id reused."""
+    if a is None:
+        return None
+    shape = getattr(a, "shape", None)
+    return (id(a), None if shape is None else tuple(shape),
+            str(getattr(a, "dtype", None)))
 
 
 # =============================================================================
@@ -325,6 +354,7 @@ class CGProblem(Problem):
     matvec: Optional[Callable[[jax.Array], jax.Array]] = None
     matrix: Any = None
     tol: Optional[float] = None
+    precision: str = "uniform"
 
     kind = "cg"
 
@@ -332,6 +362,9 @@ class CGProblem(Problem):
         if self.matvec is None and self.data is None:
             raise ValueError("CGProblem needs ELL planes (data, cols) or a "
                              "matvec callable")
+        if self.precision not in PRECISIONS:
+            raise ValueError(f"precision must be one of {PRECISIONS}, "
+                             f"got {self.precision!r}")
 
     @classmethod
     def from_ell(cls, data, cols, b, iters: int, *, matrix=None,
@@ -346,7 +379,9 @@ class CGProblem(Problem):
 
     @property
     def name(self) -> str:  # type: ignore[override]
-        return f"cg_n{self.b.shape[0]}"
+        fp = operator_fingerprint(self.data, self.cols, self.matrix,
+                                  self.matvec)
+        return f"cg_n{self.b.shape[0]}_{fp}"
 
     # -- protocol -------------------------------------------------------------
 
@@ -355,11 +390,12 @@ class CGProblem(Problem):
                 jnp.vdot(self.b, self.b))
 
     def step_fn(self):
+        dot = dot_for(self.precision)
         if self.matvec is not None:
             mv = self.matvec
-            return lambda s: kref.cg_iteration_matvec(s, mv)
-        return functools.partial(kref.cg_iteration, data=self.data,
-                                 cols=self.cols)
+        else:
+            mv = functools.partial(kref.spmv_ell, self.data, self.cols)
+        return lambda s: kref.cg_iteration_matvec(s, mv, dot=dot)
 
     def finalize(self, state):
         return state[0], state[3]
@@ -400,24 +436,24 @@ class CGProblem(Problem):
     def with_payload(self, payload) -> "CGProblem":
         return dataclasses.replace(self, b=payload)
 
+    def with_precision(self, precision: str) -> "CGProblem":
+        if precision == self.precision:
+            return self
+        return dataclasses.replace(self, precision=precision)
+
     def batch_key(self) -> tuple:
         # instances share one batch iff they solve against the SAME
-        # operator object (A is shared across the dispatch, only the
-        # right-hand sides are stacked) with the same iteration budget.
-        # Operator shapes/dtypes ride along so a reused id() of a freed
-        # array can only ever collide with a same-shaped operator (plan
-        # caches additionally pin their operands — solver_service.py).
-        def sig(a):
-            if a is None:
-                return None
-            shape = getattr(a, "shape", None)
-            dtype = getattr(a, "dtype", None)
-            return (id(a), None if shape is None else tuple(shape),
-                    str(dtype))
-
-        return ("cg", sig(self.data), sig(self.cols), id(self.matvec),
-                id(self.matrix), tuple(self.b.shape), str(self.b.dtype),
-                self.n_steps, self.tol)
+        # operator (A is shared across the dispatch, only the right-hand
+        # sides are stacked) with the same iteration budget. The content
+        # fingerprint + per-operand id/shape sigs together prevent
+        # aliasing between different same-shaped operators even across
+        # id() reuse (plan caches additionally pin their operands —
+        # solver_service.py).
+        fp = operator_fingerprint(self.data, self.cols, self.matrix,
+                                  self.matvec)
+        return ("cg", fp, _operand_sig(self.data), _operand_sig(self.cols),
+                id(self.matvec), id(self.matrix), tuple(self.b.shape),
+                str(self.b.dtype), self.n_steps, self.tol, self.precision)
 
     def array_scales_with_batch(self, name: str) -> bool:
         # the matrix is shared by every instance of a batch; the Krylov
@@ -430,6 +466,10 @@ class CGProblem(Problem):
         if self.data is None:
             raise NotImplementedError(
                 "fused CG kernel needs ELL planes (matvec-only problem)")
+        if self.precision != "uniform":
+            raise NotImplementedError(
+                "mixed precision is a loop-tier dimension (the fused "
+                "kernel reduces in storage dtype)")
         resident = (plan.policy or "MIX") in ("MAT", "MIX")
         block_rows = plan.block_rows or 256
         x, rr = kops.cg(self.data, self.cols, self.b, iters=self.n_steps,
@@ -440,6 +480,19 @@ class CGProblem(Problem):
         if self.data is None:
             raise NotImplementedError(
                 "distributed CG needs ELL planes (matvec-only problem)")
+        if self.precision != "uniform":
+            raise NotImplementedError(
+                "mixed precision is a loop-tier dimension")
+        if plan.s_step > 1:
+            if plan.fuse_reductions or plan.partition == "nnz":
+                raise ValueError(
+                    "s_step > 1 replaces the per-iteration reductions "
+                    "entirely; it composes with neither fuse_reductions "
+                    "nor partition='nnz'")
+            from repro.exec.krylov import cg_sstep_distributed
+            return cg_sstep_distributed(
+                self.data, self.cols, self.b, self.n_steps, mesh,
+                s=plan.s_step, axis=plan.shard_axis or "data")
         return cg_distributed(
             self.data, self.cols, self.b, self.n_steps, mesh,
             axis=plan.shard_axis or "data",

@@ -193,6 +193,16 @@ class BatchedProblem(Problem):
     def batch_key(self) -> tuple:
         return ("batched", self.batch, self.template.batch_key())
 
+    def with_precision(self, precision: str) -> "BatchedProblem":
+        """Precision applies uniformly to every lane (one traced program
+        serves the batch, so the reduction must be shared)."""
+        if precision == "uniform":
+            return self
+        real = self.batch - self.pad
+        rebuilt = [p.with_precision(precision)
+                   for p in self.instances[:real]]
+        return type(self)(rebuilt, pad_to=self.batch if self.pad else None)
+
     def split(self, result) -> list:
         """Per-instance results (padded lanes dropped), in instance order."""
         real = self.batch - self.pad

@@ -45,6 +45,11 @@ def execute(problem: Problem, plan: Plan, *, mesh=None):
     if not problem.supports(plan.tier):
         raise NotImplementedError(
             f"{type(problem).__name__} does not support tier {plan.tier!r}")
+    if plan.precision != "uniform":
+        # the Plan owns the decision; the problem owns the mechanism
+        # (swapping its reductions — exec.precision.dot_for). Problems
+        # that don't implement the precision raise here, before any work.
+        problem = problem.with_precision(plan.precision)
     on_sync = problem.on_sync()
     if on_sync is not None and not honors_on_sync(plan, problem.n_steps):
         # The problem declared a convergence check (e.g. CGProblem.tol)

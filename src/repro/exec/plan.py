@@ -17,6 +17,8 @@ import json
 import math
 from typing import Any, Optional
 
+from repro.exec.precision import PRECISIONS
+
 #: Execution tiers the executor dispatches on (DESIGN.md §2/§3).
 TIERS = ("host_loop", "device_loop", "resident", "distributed")
 
@@ -72,7 +74,13 @@ class Plan:
     shard_axis: Optional[str] = None
     partition: str = "rows"
     fuse_reductions: bool = False         # CG: pipelined one-psum iterations
+    #: s-step (communication-avoiding) depth: ONE collective per s_step
+    #: iterations on the distributed tier (exec.krylov; DESIGN.md §10).
+    s_step: int = 1
     inner_tier: str = "device_loop"       # loop tier inside the mesh program
+    #: reduction hardening (exec.precision): "uniform" = storage dtype,
+    #: "mixed" = fp64-or-compensated dots in the loop-tier step functions.
+    precision: str = "uniform"
     # planner metadata (projected cost of this plan; not used by execute)
     predicted_s: Optional[float] = None
     predicted_bound: Optional[str] = None
@@ -94,15 +102,29 @@ class Plan:
             raise ValueError(f"n_steps must be >= 0, got {self.n_steps}")
         if self.batch < 1:
             raise ValueError(f"batch must be >= 1, got {self.batch}")
+        if self.s_step < 1:
+            raise ValueError(f"s_step must be >= 1, got {self.s_step}")
+        if self.s_step > 1 and self.tier != "distributed":
+            raise ValueError(
+                "s_step > 1 is a distributed-tier dimension (it folds the "
+                f"reduction collectives); tier={self.tier!r} has no "
+                "collectives to fold")
+        if self.precision not in PRECISIONS:
+            raise ValueError(
+                f"precision must be one of {PRECISIONS}, got "
+                f"{self.precision!r}")
 
     # -- derived quantities ---------------------------------------------------
 
     @property
     def barriers(self) -> int:
-        """Device-wide barriers this plan pays: ceil(n_steps/fuse_steps)."""
+        """Device-wide barriers this plan pays: ceil(n_steps/fuse_steps),
+        with s-step folding (one collective per ``s_step`` iterations)
+        compounding the same way — the two never combine (plan validation
+        in the adapters rejects it), so the effective stride is the max."""
         if self.n_steps == 0:
             return 0
-        return math.ceil(self.n_steps / self.fuse_steps)
+        return math.ceil(self.n_steps / max(self.fuse_steps, self.s_step))
 
     @property
     def cached_bytes(self) -> int:

@@ -151,9 +151,13 @@ def _stencil_candidates(problem, chip: Chip, mesh, *, max_fuse: int,
 def cg_policy_from_arrays(arrays, budget_bytes: int) -> dict:
     """The Fig.-9 policy decision (IMP/VEC/MIX) from a cache plan — the
     exact logic of the legacy ``solvers.cg.plan_policy``, factored here so
-    both the legacy shim and the candidate generator share it."""
+    both the legacy shim and the candidate generator share it. "Vectors"
+    are every array that is not the operator A (for CG: r/p/x/Ap; for
+    BiCGStab the seven working vectors; for GMRES the basis V rides with
+    them), so one policy function serves the whole Krylov family."""
     cplan = plan_caching(arrays, budget_bytes)
-    vec_frac = min(cplan.fraction_of(nm) for nm in ("r", "p", "x", "Ap"))
+    vec_frac = min(cplan.fraction_of(a.name) for a in arrays
+                   if a.name != "A")
     mat_frac = cplan.fraction_of("A")
     if vec_frac < 1.0:
         policy = "IMP"          # vectors don't even fit -> rely on caches
@@ -214,6 +218,7 @@ def _cg_candidates(problem, chip: Chip, mesh, *, shard_axis: str,
              predicted_s=n * total_bytes / chip.hbm_bw
              + DISPATCH_OVERHEAD_S, **common),
     ]
+    kind = problem.kind
     has_ell = problem.data is not None
     if has_ell and pol["vector_fraction"] >= 1.0:
         bm = fused_block_rows(problem.b.shape[0])
@@ -224,12 +229,18 @@ def _cg_candidates(problem, chip: Chip, mesh, *, shard_axis: str,
         vec_cache = tuple(c for c in cache if c.name != "A")
         t_sm_vec = sm_bytes_accessed(n, sum(c.cached_bytes
                                             for c in vec_cache))
-        cands.append(Plan(
-            tier="resident", policy="VEC", block_rows=bm, cache=vec_cache,
-            predicted_s=max(n * (total_bytes - vec_traffic) / chip.hbm_bw,
-                            t_sm_vec / chip.onchip_bw)
-            + DISPATCH_OVERHEAD_S, **common))
-        if pol["matrix_fraction"] > 0.0:
+        if kind != "gmres":
+            cands.append(Plan(
+                tier="resident", policy="VEC", block_rows=bm,
+                cache=vec_cache,
+                predicted_s=max(n * (total_bytes - vec_traffic)
+                                / chip.hbm_bw, t_sm_vec / chip.onchip_bw)
+                + DISPATCH_OVERHEAD_S, **common))
+        if pol["matrix_fraction"] > 0.0 and (
+                kind != "gmres" or pol["matrix_fraction"] >= 1.0):
+            # the GMRES cycle kernel pins the WHOLE operator next to the
+            # basis (no streamed-A variant), so a partial-A MIX plan has
+            # no kernel to run on — gate it out rather than lie.
             saved = cplan.traffic_saved_per_step
             t_sm_all = sm_bytes_accessed(n, sum(c.cached_bytes
                                                 for c in cache))
@@ -242,12 +253,33 @@ def _cg_candidates(problem, chip: Chip, mesh, *, shard_axis: str,
     if mesh is not None and has_ell:
         n_chips = int(dict(mesh.shape)[shard_axis])
         local = total_bytes / n_chips
-        for fused, psums in ((False, 2), (True, 1)):
+        # psum counts per iteration: textbook CG pays 2 dependent
+        # reductions, pipelined CG 1 (PR 2); textbook BiCGStab 5,
+        # pipelined 3 (the stacked stabilization dots + omega
+        # recurrence); a GMRES(m) cycle pays 3m+2 (two CGS2 projection
+        # rounds + one norm per inner step, plus beta and the final
+        # residual) and has no fused variant.
+        variants = {"cg": ((False, 2), (True, 1)),
+                    "bicgstab": ((False, 5), (True, 3)),
+                    "gmres": ((False, 3 * getattr(problem, "m", 0) + 2),)}
+        for fused, psums in variants[kind]:
             cands.append(Plan(
                 tier="distributed", shard_axis=shard_axis,
                 fuse_reductions=fused, policy=pol["policy"],
                 predicted_s=n * (local / chip.hbm_bw
                                  + psums * COLLECTIVE_LATENCY_S)
+                + DISPATCH_OVERHEAD_S, **common))
+        if kind == "cg" and n > 1:
+            # s-step (communication-avoiding) CG: ONE psum per s
+            # iterations at the price of (2s-1)/s SpMV passes per
+            # iteration — redundant traffic for fewer latency-bound
+            # barriers, the Krylov face of temporal blocking.
+            s = min(4, n)
+            cands.append(Plan(
+                tier="distributed", shard_axis=shard_axis, s_step=s,
+                policy=pol["policy"],
+                predicted_s=n * ((2.0 - 1.0 / s) * local / chip.hbm_bw
+                                 + COLLECTIVE_LATENCY_S / s)
                 + DISPATCH_OVERHEAD_S, **common))
     return cands
 
@@ -293,7 +325,7 @@ def plan_candidates(problem: Problem, *, chip=TPU_V5E, mesh=None,
         cands = _stencil_candidates(template, chip, mesh, max_fuse=max_fuse,
                                     shard_axis=shard_axis, sub_rows=sub_rows,
                                     batch=batch, name=name)
-    elif template.kind == "cg":
+    elif template.kind in ("cg", "bicgstab", "gmres"):
         cands = _cg_candidates(template, chip, mesh, shard_axis=shard_axis,
                                sync_every=sync_every, batch=batch, name=name)
     else:

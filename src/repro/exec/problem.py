@@ -14,11 +14,60 @@ from __future__ import annotations
 
 import abc
 import dataclasses
+import zlib
 from typing import Any, Callable, Optional, Sequence
 
 import jax
+import numpy as np
 
 from repro.core.cache_policy import CacheableArray
+
+
+def operand_fingerprint(*operands) -> str:
+    """Content digest of solver operands, for cache-safe problem names.
+
+    Two same-shaped problems over *different* operators must never alias
+    in a plan/runner cache (``runtime.solver_service``) — a size-only name
+    like ``cg_n4096`` does exactly that. This digest folds each operand's
+    shape/dtype plus up to 16 sampled element values into one crc32, so
+    the name is stable for a given operator and (within crc32 collision
+    odds) distinct across different ones. Abstract values — tracers,
+    ``ShapeDtypeStruct`` planner probes — contribute shape/dtype only;
+    opaque callables contribute their identity (content is unknowable).
+    The sample is a fixed 16-element gather, so fingerprinting a device
+    array transfers O(16) elements, never the array.
+    """
+    h = zlib.crc32(b"operands")
+    for a in operands:
+        if a is None:
+            h = zlib.crc32(b"|none", h)
+            continue
+        if callable(a) and not hasattr(a, "shape"):
+            h = zlib.crc32(f"|fn:{id(a):x}".encode(), h)
+            continue
+        shape = tuple(int(d) for d in getattr(a, "shape", ()))
+        dtype = str(getattr(a, "dtype", type(a).__name__))
+        h = zlib.crc32(repr((shape, dtype)).encode(), h)
+        sample = _sample_elements(a, shape)
+        if sample is not None:
+            h = zlib.crc32(np.ascontiguousarray(sample).tobytes(), h)
+    return f"{h:08x}"
+
+
+def _sample_elements(a, shape, k: int = 16):
+    """Up to ``k`` evenly-spaced elements of a concrete array as a host
+    ndarray; None for abstract values (tracers, ShapeDtypeStructs)."""
+    size = 1
+    for d in shape:
+        size *= d
+    if size == 0:
+        return None
+    idx = np.linspace(0, size - 1, num=min(k, size)).astype(np.int64)
+    if isinstance(a, np.ndarray):
+        return a.reshape(-1)[idx]
+    if isinstance(a, jax.Array) and not isinstance(a, jax.core.Tracer):
+        return np.asarray(a.reshape(-1)[idx])
+    return None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -148,6 +197,20 @@ class Problem(abc.ABC):
         (per-instance state) or is shared by every instance of a batch
         (e.g. a common operator). Default: everything is per-instance."""
         return True
+
+    # -- precision surface (repro.exec.precision) ------------------------------
+
+    def with_precision(self, precision: str) -> "Problem":
+        """A copy of this problem running under ``precision`` (a
+        ``Plan.precision`` value). 'uniform' is always the identity;
+        adapters that support mixed precision override this with a
+        dataclass replace that swaps their reduction (see
+        ``repro.exec.precision.dot_for``)."""
+        if precision == "uniform":
+            return self
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support precision="
+            f"{precision!r}")
 
     # -- tier hooks -----------------------------------------------------------
 

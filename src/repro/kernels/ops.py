@@ -16,6 +16,7 @@ from repro.kernels import stencil2d as _s2d
 from repro.kernels import spmv_ell as _spmv
 from repro.kernels import spmv_sell as _sell
 from repro.kernels import cg_fused as _cg
+from repro.kernels import krylov_fused as _kry
 from repro.kernels import ssm_scan as _ssm
 from repro.kernels import decode_attn as _da
 
@@ -68,6 +69,23 @@ def cg(data, cols, b, *, iters: int, resident_matrix: bool = True,
     """PERKS conjugate gradient: whole iteration loop in one kernel."""
     return _cg.cg_fused(data, cols, b, iters=iters,
                         resident_matrix=resident_matrix, block_rows=block_rows)
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "resident_matrix", "block_rows"))
+def bicgstab(data, cols, b, *, iters: int, resident_matrix: bool = True,
+             block_rows: int = 256):
+    """PERKS BiCGStab: whole iteration loop in one kernel (two SpMVs per
+    iteration; A resident or streamed twice per iteration)."""
+    return _kry.bicgstab_fused(data, cols, b, iters=iters,
+                               resident_matrix=resident_matrix,
+                               block_rows=block_rows)
+
+
+@functools.partial(jax.jit, static_argnames=("m",))
+def gmres_cycle(data, cols, x, b, *, m: int):
+    """One GMRES(m) restart cycle with the Arnoldi basis VMEM-resident.
+    Returns (V, H, beta); the caller owns the small least-squares solve."""
+    return _kry.gmres_cycle_fused(data, cols, x, b, m=m)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk",))

@@ -67,15 +67,17 @@ def _safe_div(a, b):
     return jnp.where(jnp.abs(b) > 0, a / jnp.where(b == 0, 1.0, b), 0.0)
 
 
-def cg_iteration_matvec(state, matvec):
+def cg_iteration_matvec(state, matvec, dot=jnp.vdot):
     """One textbook CG iteration with a pluggable SpMV (ELL kernel, SELL
-    kernel, distributed local matvec...). state = (x, r, p, rr)."""
+    kernel, distributed local matvec...) and a pluggable reduction
+    (``dot`` — jnp.vdot, or the compensated dot of Plan.precision=mixed).
+    state = (x, r, p, rr)."""
     x, r, p, rr = state
     ap = matvec(p)
-    alpha = _safe_div(rr, jnp.vdot(p, ap))
+    alpha = _safe_div(rr, dot(p, ap))
     x = x + alpha * p
     r = r - alpha * ap
-    rr_new = jnp.vdot(r, r)
+    rr_new = dot(r, r)
     beta = _safe_div(rr_new, rr)
     p = r + beta * p
     return (x, r, p, rr_new)
@@ -95,6 +97,110 @@ def cg_run(data, cols, b, iters: int):
         return cg_iteration(s, data, cols), None
     (x, r, p, rr), _ = jax.lax.scan(body, state, None, length=iters)
     return x, rr
+
+
+# -- BiCGStab (nonsymmetric Krylov; oracle for exec/krylov.py) ----------------
+
+def bicgstab_iteration_matvec(state, matvec, dot=jnp.vdot):
+    """One BiCGStab iteration (van der Vorst 1992) with a pluggable SpMV
+    and reduction. state = (x, r, rhat, p, v, rho, alpha, omega, rr).
+
+    Every quotient goes through ``_safe_div`` so a fully-converged state
+    (r -> exact 0) is a fixed point: rho'=0 forces beta=alpha'=omega'=0
+    and every vector update vanishes — no NaNs past convergence, same
+    contract the CG iteration carries.
+    """
+    x, r, rhat, p, v, rho, alpha, omega, rr = state
+    rho_new = dot(rhat, r)
+    beta = _safe_div(rho_new, rho) * _safe_div(alpha, omega)
+    p = r + beta * (p - omega * v)
+    v = matvec(p)
+    alpha = _safe_div(rho_new, dot(rhat, v))
+    s = r - alpha * v
+    t = matvec(s)
+    omega = _safe_div(dot(t, s), dot(t, t))
+    x = x + alpha * p + omega * s
+    r = s - omega * t
+    return (x, r, rhat, p, v, rho_new, alpha, omega, dot(r, r))
+
+
+def bicgstab_initial_state(b):
+    """x=0 start: r = rhat = b; p = v = 0; the scalar carries seed at 1 so
+    the first iteration reduces to p = r (textbook start)."""
+    one = jnp.ones((), b.dtype)
+    zero = jnp.zeros_like(b)
+    return (zero, b, b, zero, zero, one, one, one, jnp.vdot(b, b))
+
+
+def bicgstab_run(data, cols, b, iters: int):
+    """``iters`` BiCGStab iterations from x0 = 0 on ELL-format A (oracle
+    for the fused kernel and the distributed variant). Returns (x, rr)."""
+    mv = lambda q: spmv_ell(data, cols, q)
+
+    def body(s, _):
+        return bicgstab_iteration_matvec(s, mv), None
+    state, _ = jax.lax.scan(body, bicgstab_initial_state(b), None,
+                            length=iters)
+    return state[0], state[8]
+
+
+# -- restarted GMRES(m) (nonsymmetric Krylov; oracle for exec/krylov.py) ------
+
+def gmres_cycle_matvec(state, matvec, b, m: int, dot=jnp.vdot,
+                       basis_reduce=None):
+    """One GMRES restart cycle: build an (m+1)-vector Arnoldi basis with
+    CGS2 (two-pass classical Gram-Schmidt — fully vectorized: rows of V
+    beyond the current column are zero, so the projections need no
+    masking), solve the (m+1) x m least-squares problem, update x, and
+    recompute the residual explicitly (one extra SpMV per cycle; the
+    price of a restart-robust ``rr``). state = (x, rr).
+
+    ``basis_reduce`` completes the basis-projection products ``V @ w``
+    (identity on one device; a psum over the shard axis when V's columns
+    are row-partitioned — the distributed tier passes it so this one
+    implementation serves both).
+    """
+    red = (lambda z: z) if basis_reduce is None else basis_reduce
+    x, _ = state
+    n = b.shape[0]
+    r = b - matvec(x)
+    beta = jnp.sqrt(dot(r, r))
+    V = jnp.zeros((m + 1, n), b.dtype).at[0].set(r * _safe_div(1.0, beta))
+    H = jnp.zeros((m + 1, m), b.dtype)
+
+    def body(j, carry):
+        V, H = carry
+        vj = jax.lax.dynamic_slice(V, (j, 0), (1, n))[0]
+        w = matvec(vj)
+        h1 = red(V @ w)
+        w = w - V.T @ h1
+        h2 = red(V @ w)                 # second CGS pass (re-orthogonalize)
+        w = w - V.T @ h2
+        hn = jnp.sqrt(dot(w, w))
+        H = jax.lax.dynamic_update_slice(H, (h1 + h2)[:, None], (0, j))
+        H = jax.lax.dynamic_update_slice(H, hn.reshape(1, 1), (j + 1, j))
+        V = jax.lax.dynamic_update_slice(
+            V, (w * _safe_div(1.0, hn))[None], (j + 1, 0))
+        return V, H
+
+    V, H = jax.lax.fori_loop(0, m, body, (V, H))
+    e1 = jnp.zeros((m + 1,), b.dtype).at[0].set(beta)
+    y, _, _, _ = jnp.linalg.lstsq(H, e1)
+    x = x + y @ V[:m]
+    r = b - matvec(x)
+    return (x, dot(r, r))
+
+
+def gmres_run(data, cols, b, cycles: int, m: int):
+    """``cycles`` GMRES(m) restart cycles from x0 = 0 on ELL-format A.
+    Returns (x, rr)."""
+    mv = lambda q: spmv_ell(data, cols, q)
+
+    def body(s, _):
+        return gmres_cycle_matvec(s, mv, b, m), None
+    state, _ = jax.lax.scan(body, (jnp.zeros_like(b), jnp.vdot(b, b)),
+                            None, length=cycles)
+    return state[0], state[1]
 
 
 # -- Mamba2 / SSD scan --------------------------------------------------------

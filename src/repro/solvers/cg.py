@@ -20,7 +20,7 @@ This module keeps the *data* surface unchanged: the dataset registry
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Any, Optional
 
 import jax
 import numpy as np
@@ -85,6 +85,9 @@ class SellOperator:
     c: int
     k_max: int
     n_rows: int
+    #: the source container (true nnz) so downstream CGProblems rank A by
+    #: the bytes it actually streams, not the padded slots
+    matrix: Any = None
 
     @staticmethod
     def from_matrix(sell: SellMatrix) -> "SellOperator":
@@ -92,7 +95,7 @@ class SellOperator:
             jnp.asarray(sell.data), jnp.asarray(sell.cols),
             jnp.asarray(sell.slice_offsets), jnp.asarray(sell.slice_k),
             jnp.asarray(sell.row_positions()), sell.c, sell.k_max,
-            sell.n_rows)
+            sell.n_rows, matrix=sell)
 
     def matvec(self, x: jax.Array) -> jax.Array:
         y = kops.spmv_sell(self.data, self.cols, self.slice_offsets,
@@ -137,7 +140,8 @@ def run_device_loop_sell(op: SellOperator, b, iters: int, *,
     warn_once("solvers.cg.run_device_loop_sell",
               "repro.exec.execute(CGProblem.from_matvec(op.matvec, ...), "
               "Plan(tier='device_loop', sync_every=...))")
-    return execute(CGProblem.from_matvec(op.matvec, b, iters, tol=tol),
+    return execute(CGProblem.from_matvec(op.matvec, b, iters,
+                                         matrix=op.matrix, tol=tol),
                    Plan(tier="device_loop", sync_every=sync_every))
 
 

@@ -19,6 +19,8 @@ from repro.sparse.generate import (
     DatasetSpec,
     generate,
     irregular_names,
+    nonsymmetric_names,
+    symmetric_names,
 )
 from repro.sparse.io import read_mtx, read_mtx_csr, write_mtx
 from repro.sparse.partition import (
@@ -41,6 +43,8 @@ __all__ = [
     "DatasetSpec",
     "generate",
     "irregular_names",
+    "nonsymmetric_names",
+    "symmetric_names",
     "read_mtx",
     "read_mtx_csr",
     "write_mtx",

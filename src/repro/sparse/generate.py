@@ -175,6 +175,64 @@ def graph_laplacian_powerlaw(n: int, m: int = 4, seed: int = 0,
     return _spd_from_pairs(n, ru, cu, vu, dtype)
 
 
+def convdiff2d(side: int, peclet: float = 1.5, shift: float = 0.5,
+               dtype=np.float32) -> CSRMatrix:
+    """2D convection–diffusion on a side x side grid, first-order upwind:
+    the canonical *nonsymmetric* PDE operator (the convection term breaks
+    the symmetry the Poisson suite has). Per grid direction the stencil is
+
+        -(1 + pe) u_west + (2 + pe) u_center - u_east
+
+    with cell Péclet number ``pe`` — upwinding loads the inflow neighbour,
+    so A != A^T for any pe > 0. ``shift`` adds a mass term to the
+    diagonal, making the matrix strictly diagonally dominant with positive
+    diagonal: the symmetric part is then positive definite (field of
+    values in the right half-plane), so GMRES/BiCGStab converge on every
+    entry. Structure class: regular (5-point, constant interior row nnz).
+    """
+    n = side * side
+    idx = np.arange(n)
+    r, c = idx // side, idx % side
+    # diagonal + the four couplings (row -> neighbour column), upwinded
+    rows, cols, vals = [idx], [idx], [np.full(n, 4.0 + 2.0 * peclet + shift)]
+    west = idx[c > 0]
+    rows.append(west); cols.append(west - 1)
+    vals.append(np.full(len(west), -(1.0 + peclet)))
+    east = idx[c < side - 1]
+    rows.append(east); cols.append(east + 1)
+    vals.append(np.full(len(east), -1.0))
+    south = idx[r > 0]
+    rows.append(south); cols.append(south - side)
+    vals.append(np.full(len(south), -(1.0 + peclet)))
+    north = idx[r < side - 1]
+    rows.append(north); cols.append(north + side)
+    vals.append(np.full(len(north), -1.0))
+    return COOMatrix(np.concatenate(rows), np.concatenate(cols),
+                     np.concatenate(vals).astype(dtype), (n, n)).to_csr()
+
+
+def skew_shifted_random(n: int, row_nnz: int = 6, shift: float = 4.0,
+                        seed: int = 0, dtype=np.float32) -> CSRMatrix:
+    """Shifted skew-symmetric random sparse: A = shift*I + (R - R^T) with
+    R a random scatter — maximally nonsymmetric (the symmetric part of
+    the off-diagonal is exactly zero), purely imaginary off-diagonal
+    spectrum shifted into the right half-plane. The symmetric part is
+    ``shift*I`` (positive definite), so GMRES residuals contract at a
+    known rate while CG's SPD assumption is violated as hard as possible
+    — the adversarial entry for solver-applicability tests. Structure
+    class: irregular (scatter collisions give variable row nnz)."""
+    rng = np.random.default_rng(seed)
+    ru = np.repeat(np.arange(n), row_nnz)
+    cu = rng.integers(0, n, n * row_nnz)
+    keep = ru < cu                     # strict upper triangle of R
+    ru, cu = ru[keep], cu[keep]
+    vu = rng.standard_normal(len(ru)).astype(dtype) * 0.2
+    rows = np.concatenate([ru, cu, np.arange(n)])
+    cols = np.concatenate([cu, ru, np.arange(n)])
+    vals = np.concatenate([vu, -vu, np.full(n, shift)])   # R - R^T + shift*I
+    return COOMatrix(rows, cols, vals.astype(dtype), (n, n)).to_csr()
+
+
 def random_shifted(n: int, min_row_nnz: int = 4, max_row_nnz: int = 24,
                    seed: int = 0, dtype=np.float32) -> CSRMatrix:
     """Diagonally-shifted random sparse: each row scatters a uniformly
@@ -208,6 +266,9 @@ class DatasetSpec:
     kwargs: dict
     structure: str
     note: str = ""
+    #: SPD entries (CG-applicable); False marks the nonsymmetric suite
+    #: (BiCGStab/GMRES territory — CG's convergence theory does not apply)
+    symmetric: bool = True
 
     def build(self) -> CSRMatrix:
         return self.builder(**self.kwargs)
@@ -234,6 +295,18 @@ REGISTRY: dict[str, DatasetSpec] = {
                     {"n": 16384, "min_row_nnz": 4, "max_row_nnz": 24},
                     "irregular",
                     "unstructured scatter, row nnz uniform in 4..24"),
+        # -- nonsymmetric suite (BiCGStab/GMRES; straddles the proxy VMEM
+        #    the same way the SPD entries do: _small cacheable, _16k IMP) --
+        DatasetSpec("convdiff_small", convdiff2d, {"side": 48}, "regular",
+                    "n=2304 upwind convection-diffusion; cacheable regime",
+                    symmetric=False),
+        DatasetSpec("convdiff_16k", convdiff2d, {"side": 128}, "regular",
+                    "n=16384; vectors overflow the proxy VMEM (IMP regime)",
+                    symmetric=False),
+        DatasetSpec("skew_shift_8k", skew_shifted_random,
+                    {"n": 8192, "row_nnz": 6}, "irregular",
+                    "shifted skew-symmetric scatter: zero symmetric "
+                    "off-diagonal part", symmetric=False),
     )
 }
 
@@ -248,3 +321,11 @@ def generate(name: str) -> CSRMatrix:
 
 def irregular_names() -> list[str]:
     return [n for n, s in REGISTRY.items() if s.structure == "irregular"]
+
+
+def symmetric_names() -> list[str]:
+    return [n for n, s in REGISTRY.items() if s.symmetric]
+
+
+def nonsymmetric_names() -> list[str]:
+    return [n for n, s in REGISTRY.items() if not s.symmetric]

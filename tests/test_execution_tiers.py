@@ -241,3 +241,145 @@ def test_distributed_cg_fused_reductions(dist_run):
         assert res[ds]["rel_err"] < 1e-4, res[ds]
         assert abs(res[ds]["rr"] - res[ds]["rr_ref"]) <= \
             1e-3 * (res[ds]["rr_ref"] + 1e-12), res[ds]
+
+
+# -- the Krylov family across tiers (exec/krylov.py, DESIGN.md §10) -------------
+
+_KRYLOV_TIERS = """
+    import json, jax, jax.numpy as jnp, numpy as np
+    from repro.exec import BiCGStabProblem, GMRESProblem, Plan, execute
+    from repro.exec.krylov import cg_sstep_distributed
+    from repro.kernels import ref
+    from repro.solvers import cg as cgs
+    from repro.dist.mesh import make_mesh
+
+    mesh = make_mesh((8,), ("data",))
+    data, cols = cgs.load_dataset("banded_4k")
+    b = jax.random.normal(jax.random.key(1), (data.shape[0],), jnp.float32)
+    out = {}
+
+    def rel(x, x_ref):
+        return float(jnp.abs(x - x_ref).max()) / float(jnp.abs(x_ref).max())
+
+    # BiCGStab: loop tier == oracle; resident and distributed
+    # (fused + textbook reduction schedules) track it.
+    iters = 20
+    prob = BiCGStabProblem.from_ell(data, cols, b, iters)
+    x_o, rr_o = ref.bicgstab_run(data, cols, b, iters)
+    rows = {"rr_ref": float(rr_o)}
+    x_l, _ = execute(prob, Plan(tier="device_loop"))
+    rows["loop"] = float(jnp.abs(x_l - x_o).max())
+    x_r, _ = execute(prob, Plan(tier="resident", policy="MIX"))
+    rows["resident"] = rel(x_r, x_o)
+    for fused, key in ((True, "dist_fused"), (False, "dist_textbook")):
+        x_d, rr_d = execute(prob, Plan(tier="distributed",
+                                       fuse_reductions=fused), mesh=mesh)
+        rows[key] = rel(x_d, x_o)
+        rows[key + "_rr"] = float(rr_d)
+    out["bicgstab"] = rows
+
+    # GMRES(m): loop == oracle; resident kernel and distributed track it.
+    cycles, m = 2, 8
+    gprob = GMRESProblem.from_ell(data, cols, b, cycles, m=m)
+    xg_o, rrg_o = ref.gmres_run(data, cols, b, cycles, m)
+    grows = {"rr_ref": float(rrg_o)}
+    xg_l, _ = execute(gprob, Plan(tier="device_loop"))
+    grows["loop"] = float(jnp.abs(xg_l - xg_o).max())
+    xg_r, _ = execute(gprob, Plan(tier="resident"))
+    grows["resident"] = rel(xg_r, xg_o)
+    xg_d, _ = execute(gprob, Plan(tier="distributed"), mesh=mesh)
+    grows["dist"] = rel(xg_d, xg_o)
+    out["gmres"] = grows
+
+    # s-step CG vs standard CG at matched cadence (non-dividing tail).
+    x_c, rr_c = ref.cg_run(data, cols, b, 10)
+    x_s, rr_s = cg_sstep_distributed(data, cols, b, 10, mesh, s=4)
+    out["sstep"] = {"rel": rel(x_s, x_c), "rr": float(rr_s),
+                    "rr_ref": float(rr_c), "bb": float(jnp.vdot(b, b))}
+    print(json.dumps(out))
+"""
+
+
+def test_krylov_tier_sweep(dist_run):
+    """BiCGStab and GMRES(m) across loop / resident / distributed tiers
+    on a real registry operator, all against the jnp oracles; s-step CG
+    against standard CG at matched total iteration count."""
+    res = dist_run(_KRYLOV_TIERS, n_dev=8, timeout=600)
+    bi = res["bicgstab"]
+    assert bi["loop"] == 0.0                    # same graph, same order
+    assert bi["resident"] < 1e-4, bi
+    for key in ("dist_fused", "dist_textbook"):
+        assert bi[key] < 1e-4, bi
+        assert abs(bi[key + "_rr"] - bi["rr_ref"]) <= \
+            1e-3 * (bi["rr_ref"] + 1e-12), bi
+    gm = res["gmres"]
+    assert gm["loop"] < 1e-6, gm                # lstsq: jit vs eager ulps
+    assert gm["resident"] < 1e-4, gm
+    assert gm["dist"] < 1e-4, gm
+    ss = res["sstep"]
+    assert ss["rel"] < 1e-3, ss
+    # both residuals sit at the f32 convergence floor; the monomial basis
+    # stagnates a few ulps higher than textbook CG, so compare both to
+    # the initial residual rather than to each other
+    assert ss["rr"] <= 1e-8 * ss["bb"], ss
+    assert ss["rr_ref"] <= 1e-8 * ss["bb"], ss
+
+
+def test_krylov_collective_counts(dist_run):
+    """The communication contracts, counted in the traced jaxprs with
+    scan trip counts multiplied through:
+
+      * pipelined BiCGStab: THREE psums per iteration (rho, rhat.v, the
+        stacked stabilization dots) vs FIVE textbook;
+      * GMRES(m): 3m+2 psums per restart cycle;
+      * s-step CG: ONE psum per s iterations — ceil(iters/s) total, the
+        tentpole guarantee.
+    """
+    res = dist_run("""
+        import json, jax, jax.numpy as jnp
+        from repro.exec.krylov import (bicgstab_distributed,
+                                       cg_sstep_distributed,
+                                       gmres_distributed)
+        from repro.solvers import cg as cgs
+        from repro.dist.mesh import make_mesh
+
+        def count_psum(jx, mult=1):
+            n = 0
+            for eqn in jx.eqns:
+                if eqn.primitive.name == "psum":
+                    n += mult
+                m = (mult * eqn.params["length"]
+                     if eqn.primitive.name == "scan" else mult)
+                for v in eqn.params.values():
+                    for s in (v if isinstance(v, (tuple, list)) else (v,)):
+                        inner = getattr(s, "jaxpr", s)
+                        if hasattr(inner, "eqns"):
+                            n += count_psum(inner, m)
+            return n
+
+        mesh = make_mesh((8,), ("data",))
+        data, cols = cgs.load_dataset("poisson_64")
+        b = jnp.ones((data.shape[0],))
+        out = {}
+        for fused, key in ((True, "bicgstab_fused"),
+                           (False, "bicgstab_textbook")):
+            jx = jax.make_jaxpr(lambda b: bicgstab_distributed(
+                data, cols, b, 5, mesh, fuse_reductions=fused))(b)
+            out[key] = count_psum(jx.jaxpr)
+        jx = jax.make_jaxpr(lambda b: gmres_distributed(
+            data, cols, b, 2, 8, mesh))(b)
+        out["gmres"] = count_psum(jx.jaxpr)
+        for iters, s in ((12, 4), (6, 3), (10, 4), (5, 1)):
+            jx = jax.make_jaxpr(lambda b: cg_sstep_distributed(
+                data, cols, b, iters, mesh, s=s))(b)
+            out[f"sstep_{iters}_{s}"] = count_psum(jx.jaxpr)
+        print(json.dumps(out))
+    """, n_dev=8, timeout=600)
+    assert res["bicgstab_fused"] == 15      # 3 per iteration x 5
+    assert res["bicgstab_textbook"] == 25   # 5 per iteration x 5
+    assert res["gmres"] == 52               # (3*8 + 2) per cycle x 2
+    # ONE Gram-matrix psum per s iterations, ceil on the tail:
+    assert res["sstep_12_4"] == 3
+    assert res["sstep_6_3"] == 2
+    assert res["sstep_10_4"] == 3           # 4+4+2
+    assert res["sstep_5_1"] == 5            # s=1 degenerates to 1/iter

@@ -12,7 +12,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.exec import BatchedProblem, CGProblem, Plan, StencilProblem, execute
+from repro.exec import (BatchedProblem, BiCGStabProblem, CGProblem,
+                        GMRESProblem, Plan, StencilProblem, execute)
 from repro.kernels.common import get_spec
 from repro.runtime.solver_service import (
     RequestResult,
@@ -20,6 +21,7 @@ from repro.runtime.solver_service import (
     SolverService,
 )
 from repro.solvers.cg import load_dataset
+from repro.sparse.generate import banded_spd
 
 STEPS = 4
 
@@ -258,3 +260,47 @@ def test_plan_cache_pins_operator_objects():
     assert template.data is data
     assert svc.evict_plans() == 1
     assert svc.stats()["distinct_plans"] == 0
+
+
+def _two_operators(n=512):
+    """Two operators with IDENTICAL shapes/dtypes but different content —
+    the collision case the content fingerprint exists for."""
+    out = []
+    for seed in (31, 32):
+        ell = banded_spd(n, 4, seed=seed).to_ell()
+        out.append((jnp.asarray(ell.data), jnp.asarray(ell.cols)))
+    return out
+
+
+@pytest.mark.parametrize("make", [
+    lambda d, c, b: CGProblem.from_ell(d, c, b, STEPS),
+    lambda d, c, b: BiCGStabProblem.from_ell(d, c, b, STEPS),
+    lambda d, c, b: GMRESProblem.from_ell(d, c, b, 2, m=6),
+], ids=["cg", "bicgstab", "gmres"])
+def test_same_size_different_matrix_never_shares_runner(make):
+    """Two same-shaped requests over different operators must resolve to
+    distinct names and batch keys (the content fingerprint), land in
+    separate batches with separately cached runners, and each come back
+    with ITS OWN operator's solution — the failure mode being guarded:
+    a runner cache keyed only on sizes would serve request 2 the
+    compiled solve of request 1's matrix."""
+    (d1, c1), (d2, c2) = _two_operators()
+    b = jax.random.normal(jax.random.key(5), (d1.shape[0],), jnp.float32)
+    p1, p2 = make(d1, c1, b), make(d2, c2, b)
+    assert p1.name != p2.name
+    assert p1.batch_key() != p2.batch_key()
+
+    svc = SolverService(ServiceConfig(max_batch=8))
+    rids = {svc.submit(p): p for p in (p1, p2)}
+    results = svc.drain()
+    assert svc.stats()["batches"] == 2
+    assert len(svc.chosen_plans()) == 2
+    for rid, prob in rids.items():
+        got = jax.tree.leaves(results[rid].result)
+        want = jax.tree.leaves(_single_result(prob, results[rid].plan))
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                       rtol=1e-5, atol=1e-6)
+    # and the two answers genuinely differ (different operators)
+    xs = [np.asarray(jax.tree.leaves(results[r].result)[0]) for r in rids]
+    assert np.abs(xs[0] - xs[1]).max() > 1e-3

@@ -14,18 +14,22 @@ from repro.solvers import cg as cgs
 from repro.sparse import (
     COOMatrix,
     CSRMatrix,
+    PROXY_ONCHIP_BYTES,
     REGISTRY,
     balance_report,
     choose_format,
     generate,
     irregular_names,
     nnz_balanced_partition,
+    nonsymmetric_names,
     partition_nnz,
     read_mtx,
     read_mtx_csr,
     shard_by_nnz,
+    symmetric_names,
     write_mtx,
 )
+from repro.sparse.generate import skew_shifted_random
 
 KEY = jax.random.key(7)
 
@@ -291,3 +295,98 @@ def test_shard_by_nnz_preserves_spmv(rng):
     # per-shard nnz is balanced to the greedy bound
     per_shard = (sh.data.reshape(8, sh.rows_per_part, -1) != 0).sum((1, 2))
     assert per_shard.max() <= csr.nnz / 8 + csr.row_nnz.max()
+
+
+# -- the nonsymmetric suite (BiCGStab/GMRES territory) -------------------------
+
+def test_nonsymmetric_registry_tags():
+    assert set(nonsymmetric_names()) == \
+        {"convdiff_small", "convdiff_16k", "skew_shift_8k"}
+    assert set(symmetric_names()) | set(nonsymmetric_names()) == set(REGISTRY)
+    assert not (set(symmetric_names()) & set(nonsymmetric_names()))
+
+
+@pytest.mark.parametrize("name", ["convdiff_small", "skew_shift_8k"])
+def test_nonsymmetric_format_roundtrip(name):
+    """CSR -> ELL and CSR -> SELL reproduce the dense operator exactly
+    (the formats only reshuffle slots; no arithmetic)."""
+    csr = generate(name)
+    dense = csr.to_dense()
+    np.testing.assert_array_equal(csr.to_ell().to_dense(), dense)
+    sell = csr.to_sell(c=8, sigma=64)
+    np.testing.assert_array_equal(sell.to_dense(), dense)
+
+
+def test_convdiff_spectrum_sanity():
+    """Upwind convection-diffusion: genuinely nonsymmetric, strictly
+    diagonally dominant (upwinding's M-matrix property), symmetric part
+    positive definite — the class BiCGStab/GMRES theory covers."""
+    A = generate("convdiff_small").to_dense().astype(np.float64)
+    asym = A - A.T
+    assert np.abs(asym).max() > 0.1            # truly nonsymmetric
+    diag = np.abs(np.diag(A))
+    off = np.abs(A).sum(axis=1) - diag
+    assert (diag > off).all()                  # strict diagonal dominance
+    sym_eigs = np.linalg.eigvalsh((A + A.T) / 2)
+    assert sym_eigs.min() > 0                  # definite symmetric part
+
+
+def test_skew_shift_spectrum_sanity():
+    """shift*I + (R - R^T): the symmetric part is EXACTLY shift*I, so
+    every eigenvalue has real part == shift — the cleanest certificate
+    that the field of values stays in the right half plane."""
+    spec = REGISTRY["skew_shift_8k"]
+    A = skew_shifted_random(n=512, row_nnz=spec.kwargs["row_nnz"]) \
+        .to_dense().astype(np.float64)
+    shift = 4.0
+    sym = (A + A.T) / 2
+    np.testing.assert_allclose(sym, shift * np.eye(512), atol=1e-12)
+    assert np.abs(A - A.T).max() > 0.1
+    eigs = np.linalg.eigvals(A)
+    np.testing.assert_allclose(eigs.real, shift, atol=1e-8)
+
+
+def test_nonsymmetric_entries_straddle_proxy_vmem():
+    """Same sizing story as the SPD suite: the _small entry's vector
+    working set fits the 256 KiB proxy VMEM, the _16k one overflows it
+    (forcing the IMP regime), and the matrix itself never fits."""
+    small = generate("convdiff_small")
+    big = generate("convdiff_16k")
+    vec = lambda csr: 4 * csr.shape[0]
+    assert 7 * vec(small) < PROXY_ONCHIP_BYTES      # BiCGStab's 7 vectors
+    assert 7 * vec(big) > PROXY_ONCHIP_BYTES
+    assert big.nnz * 8 > PROXY_ONCHIP_BYTES
+
+
+def test_sell_operator_threads_true_nnz_to_planner(monkeypatch):
+    """Regression: ``run_device_loop_sell`` used to build its CGProblem
+    without ``matrix=``, so the planner saw nnz=0 for A on the SELL path
+    (A absent from the knapsack entirely). The SellOperator now carries
+    its source container and the shim threads it through — the captured
+    problem must rank A by the container's TRUE nnz, not its padded
+    slots and not zero."""
+    from repro.core.cache_policy import cg_arrays_for
+    from repro.solvers import cg as cgs
+
+    op = cgs.load_sell("fem_band_8k")
+    assert op.matrix is not None
+    captured = {}
+    real_execute = cgs.execute
+
+    def spy(problem, plan, **kw):
+        captured["problem"] = problem
+        return real_execute(problem, plan, **kw)
+
+    monkeypatch.setattr(cgs, "execute", spy)
+    b = np.random.default_rng(0).standard_normal(op.n_rows).astype(np.float32)
+    with pytest.warns(DeprecationWarning):
+        cgs.run_device_loop_sell(op, jnp.asarray(b), 2)
+
+    prob = captured["problem"]
+    assert prob.matrix is op.matrix
+    a_entry = {a.name: a for a in prob.cacheable_arrays()}["A"]
+    true_a = {a.name: a for a in cg_arrays_for(op.matrix)}["A"]
+    assert a_entry.bytes == true_a.bytes > 0
+    # padded SELL slots would overstate A: true nnz must be strictly less
+    padded = op.data.shape[0] * (op.data.dtype.itemsize + 4)
+    assert a_entry.bytes < padded
