@@ -8,16 +8,28 @@ signal) plus which candidate the planner ranked first and which one
 actually won. The measured winners' Plans are written as one JSON
 artifact keyed by problem name (``REPRO_PLAN_JSON`` env; CI uploads it
 per commit), exercising the Plan round-trip on every bench run.
+
+Every measurement also lands in the ambient drift ledger
+(``repro.obs.DriftLedger``) when one is installed — a second run with
+the same ledger skips re-measuring what it already knows. ``--record
+PATH`` appends the per-candidate predicted/measured trajectory to
+``benchmarks/BENCH_exec.json`` (the committed history; see
+docs/BENCHMARKS.md).
 """
 from __future__ import annotations
 
 import json
 import os
+import sys
+
+# runnable directly (`python benchmarks/exec_bench.py --record ...`)
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.util import row
+from repro import obs
 from repro.core.hardware import TPU_V5E
 from repro.exec import CGProblem, Plan, StencilProblem, autotune
 from repro.kernels.common import get_spec
@@ -37,13 +49,31 @@ def _report(section: str, result, n_steps: int, chip_name: str):
             f"chip={chip_name}")
 
 
-def run(quick: bool = True, chip=TPU_V5E, plan_json: str | None = None):
+def _record_entry(section: str, result, chip_name: str) -> dict:
+    return {
+        "problem": section, "chip": chip_name,
+        "jax": jax.__version__,
+        "best": obs.plan_signature(result.best),
+        "candidates": [{
+            "plan": obs.plan_signature(tr.plan),
+            "tier": tr.plan.tier,
+            "predicted_s": tr.predicted_s,
+            "measured_s": round(tr.measured_s, 6),
+            "prediction_ratio": (None if tr.prediction_ratio is None
+                                 else round(tr.prediction_ratio, 3)),
+        } for tr in result.table],
+    }
+
+
+def run(quick: bool = True, chip=TPU_V5E, plan_json: str | None = None,
+        record_path: str | None = None):
     plan_json = plan_json if plan_json is not None else \
         os.environ.get("REPRO_PLAN_JSON", "")
     steps = 8
 
     names = ["2d5pt"] if quick else ["2d5pt", "3d7pt"]
     winners: dict[str, Plan] = {}
+    entries = []
     for name in names:
         spec = get_spec(name)
         shape = (48, 64) if spec.ndim == 2 else (24, 16, 32)
@@ -52,6 +82,7 @@ def run(quick: bool = True, chip=TPU_V5E, plan_json: str | None = None):
         res = autotune(problem, chip=chip, top_k=4, warmup=1, iters=3)
         _report(f"stencil_{name}", res, steps, chip.name)
         winners[f"stencil_{name}"] = res.best
+        entries.append(_record_entry(f"stencil_{name}", res, chip.name))
 
     data, cols = load_dataset("poisson_64")
     b = jax.random.normal(jax.random.key(1), (data.shape[0],), jnp.float32)
@@ -59,6 +90,7 @@ def run(quick: bool = True, chip=TPU_V5E, plan_json: str | None = None):
     res = autotune(problem, chip=chip, top_k=4, warmup=1, iters=3)
     _report("cg_poisson_64", res, steps, chip.name)
     winners["cg_poisson_64"] = res.best
+    entries.append(_record_entry("cg_poisson_64", res, chip.name))
 
     if plan_json:
         with open(plan_json, "w") as f:
@@ -68,4 +100,26 @@ def run(quick: bool = True, chip=TPU_V5E, plan_json: str | None = None):
         with open(plan_json) as f:
             loaded = json.load(f)
         assert {k: Plan.from_dict(d) for k, d in loaded.items()} == winners
+
+    if record_path:
+        try:
+            history = json.load(open(record_path))
+        except (FileNotFoundError, json.JSONDecodeError):
+            history = []
+        history.append({"quick": quick, "entries": entries})
+        with open(record_path, "w") as f:
+            json.dump(history, f, indent=2)
+            f.write("\n")
     return winners
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--record", default=None,
+                    help="append the measured trajectory to this JSON "
+                         "history (benchmarks/BENCH_exec.json)")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(quick=not args.full, record_path=args.record)

@@ -21,14 +21,26 @@ per s iterations. The CI gate asserts the s-step reduction.
 ``krylov_mixed_<name>`` — Plan.precision sweep: uniform vs mixed
 (compensated reductions) per-iteration cost, plus the iterative-
 refinement residual improvement (solve_refined).
+
+``krylov_autotune_*`` — ``autotune`` over the planner's candidates for
+the first BiCGStab/GMRES problem, with every measurement recorded into
+the ambient drift ledger (``repro.obs``). ``--record PATH`` appends the
+predicted/measured trajectory to ``benchmarks/BENCH_krylov.json``.
 """
 from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.util import time_fn, row
+from repro import obs
 from repro.core.hardware import TPU_V5E
 
 ITERS = 20
@@ -51,9 +63,9 @@ def _count_psum(jx, mult=1):
     return n
 
 
-def run(quick: bool = False, chip=TPU_V5E):
+def run(quick: bool = False, chip=TPU_V5E, record_path: str | None = None):
     from repro.exec import (BiCGStabProblem, CGProblem, GMRESProblem, Plan,
-                            execute, plan, solve_refined)
+                            autotune, execute, plan, solve_refined)
     from repro.exec.adapters import cg_distributed, fused_block_rows
     from repro.exec.krylov import (bicgstab_distributed, cg_sstep_distributed,
                                    gmres_distributed)
@@ -168,6 +180,59 @@ def run(quick: bool = False, chip=TPU_V5E):
         f"rr_mixed={float(rr_m) / bb:.3e};"
         f"rr_refined={float(rr_ref) / bb:.3e}")
 
+    # -- autotune through the drift ledger ------------------------------------
+    name = names[0]
+    data, cols = operator(name)
+    b = jax.random.normal(jax.random.key(1), (data.shape[0],), jnp.float32)
+    entries = []
+    for family, prob in (
+            ("bicgstab", BiCGStabProblem.from_ell(data, cols, b, iters)),
+            ("gmres", GMRESProblem.from_ell(data, cols, b, CYCLES, m=M))):
+        res = autotune(prob, chip=chip, top_k=3, warmup=1, iters=3)
+        steps = prob.n_steps
+        for rank, tr in enumerate(res.table):
+            r = tr.prediction_ratio
+            row(f"krylov_autotune_{family}_{name}_{tr.plan.tier}",
+                tr.measured_s / steps * 1e6,
+                f"plan={obs.plan_signature(tr.plan)};planner_rank={rank};"
+                f"chosen={int(tr.plan == res.best)};"
+                f"prediction_ratio={'na' if r is None else f'{r:.2f}'};"
+                f"chip={chip.name}")
+        entries.append({
+            "problem": f"{family}_{name}", "chip": chip.name,
+            "jax": jax.__version__, "best": obs.plan_signature(res.best),
+            "candidates": [{
+                "plan": obs.plan_signature(tr.plan),
+                "tier": tr.plan.tier,
+                "predicted_s": tr.predicted_s,
+                "measured_s": round(tr.measured_s, 6),
+                "prediction_ratio": (None if tr.prediction_ratio is None
+                                     else round(tr.prediction_ratio, 3)),
+            } for tr in res.table],
+        })
+
+    if record_path:
+        try:
+            history = json.load(open(record_path))
+        except (FileNotFoundError, json.JSONDecodeError):
+            history = []
+        history.append({"quick": quick, "entries": entries})
+        with open(record_path, "w") as f:
+            json.dump(history, f, indent=2)
+            f.write("\n")
+
     gm = float(np.exp(np.mean(np.log(speedups))))
     row("krylov_geomean", 0.0, f"speedup={gm:.2f}x")
     return gm
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--record", default=None,
+                    help="append the measured trajectory to this JSON "
+                         "history (benchmarks/BENCH_krylov.json)")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(quick=not args.full, record_path=args.record)

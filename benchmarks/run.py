@@ -38,6 +38,14 @@ REPRO_BENCH_SECTIONS) runs a subset; ``--chip tpu_v5p`` re-projects the
 model-derived columns for another chip (core/hardware.py CHIPS). The CSV
 schema and the full bench-section <-> paper-figure mapping are
 documented in docs/BENCHMARKS.md.
+
+Observability (DESIGN.md §11): ``--trace PATH`` (env REPRO_TRACE)
+installs an ambient ``repro.obs.Tracer`` for the whole run and writes
+``PATH`` as Chrome trace-event JSON (load it in Perfetto) plus
+``PATH.jsonl`` as raw JSON-lines; ``--ledger PATH`` (env REPRO_LEDGER)
+installs a persisted ``DriftLedger`` so every autotuned measurement is
+recorded — rerunning against the same ledger skips re-measuring plans it
+already knows on this chip/jax version.
 """
 from __future__ import annotations
 
@@ -73,6 +81,12 @@ def main(argv=None) -> None:
     ap.add_argument("--chip", default="tpu_v5e",
                     help="chip for model-projected columns "
                          "(core/hardware.py CHIPS)")
+    ap.add_argument("--trace", default=os.environ.get("REPRO_TRACE", ""),
+                    help="write a Chrome trace-event JSON of the whole run "
+                         "here (plus .jsonl raw events; env REPRO_TRACE)")
+    ap.add_argument("--ledger", default=os.environ.get("REPRO_LEDGER", ""),
+                    help="persist autotune measurements to this drift-"
+                         "ledger JSON (env REPRO_LEDGER)")
     args = ap.parse_args(argv)
     sections = _parse_sections(args.sections)
 
@@ -80,12 +94,20 @@ def main(argv=None) -> None:
     from benchmarks import stencil_bench, cg_bench, policy_bench, decode_bench
     from benchmarks import batch_bench, exec_bench, train_bench
     from benchmarks.util import row
+    from repro import obs
     from repro.core.hardware import CHIPS
 
     if args.chip not in CHIPS:
         raise SystemExit(f"unknown chip {args.chip!r}; "
                          f"choose from {sorted(CHIPS)}")
     chip = CHIPS[args.chip]
+
+    tracer = None
+    if args.trace:
+        tracer = obs.Tracer()
+        obs.set_tracer(tracer)
+    if args.ledger:
+        obs.set_ledger(obs.DriftLedger(args.ledger))
 
     print("name,us_per_call,derived")
     geomeans = {}
@@ -130,6 +152,10 @@ def main(argv=None) -> None:
     if geomeans:
         row("summary_geomeans", 0.0,
             ";".join(f"{k}={v:.2f}x" for k, v in geomeans.items()))
+
+    if tracer is not None:
+        tracer.write_chrome(args.trace)
+        tracer.write_jsonl(args.trace + ".jsonl")
 
 
 if __name__ == "__main__":

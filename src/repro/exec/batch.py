@@ -39,6 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.cache_policy import CacheableArray
 from repro.exec.problem import HaloSpec, Problem
 
@@ -278,7 +279,8 @@ class LaneRunner:
     from convergence ride the same program.
     """
 
-    def __init__(self, template: Problem, width: int):
+    def __init__(self, template: Problem, width: int,
+                 tracer: Optional["obs.Tracer"] = None):
         if isinstance(template, BatchedProblem):
             raise TypeError("LaneRunner wants a single-instance template; "
                             "it owns the lane stacking itself")
@@ -286,6 +288,10 @@ class LaneRunner:
             raise ValueError(f"width must be >= 1, got {width}")
         self.template = template
         self.width = width
+        # a tracer pinned here at construction wins; otherwise every emit
+        # resolves the ambient tracer at call time, so a runner built
+        # before `use_tracer(...)` still lands in the trace
+        self._tracer = tracer
         self.n_steps = int(template.n_steps)
         self._vstep = jax.vmap(template.step_fn())
         conv = template.convergence()
@@ -306,6 +312,19 @@ class LaneRunner:
                 lambda g, v: g.at[lane].set(v), grp, x))
         self._freeze = jax.jit(
             lambda steps, lane: steps.at[lane].set(self.n_steps))
+        obs.get_metrics().counter("executor_retraces_total",
+                                  tier="lane_runner").inc()
+        tr = self._trace()
+        if tr.enabled:
+            tr.event("lane_compile", cat="compile", track=self._track(),
+                     template=template.name, width=width,
+                     n_steps=self.n_steps)
+
+    def _trace(self) -> "obs.Tracer":
+        return self._tracer if self._tracer is not None else obs.get_tracer()
+
+    def _track(self) -> str:
+        return f"lanes:{self.template.name}"
 
     # -- group stepping --------------------------------------------------------
 
@@ -357,6 +376,11 @@ class LaneRunner:
             _, p = problem.convergence()
             params = self._set_row(params,
                                    jax.tree.map(jnp.asarray, p), idx)
+        tr = self._trace()
+        if tr.enabled:
+            tr.event("lane_admit", cat="lane", track=self._track(),
+                     lane=lane, problem=problem.name)
+        obs.get_metrics().counter("lane_admissions_total").inc()
         return LaneState(state=state, steps_done=steps, params=params)
 
     def convergence_vector(self, lanes: LaneState):
@@ -375,6 +399,11 @@ class LaneRunner:
     def retire(self, lanes: LaneState, lane: int) -> LaneState:
         """Freeze a lane (converged or exhausted): its counter jumps to
         ``n_steps`` so the group step masks it out from now on."""
+        tr = self._trace()
+        if tr.enabled:
+            tr.event("lane_retire", cat="lane", track=self._track(),
+                     lane=lane)
+        obs.get_metrics().counter("lane_retirements_total").inc()
         return dataclasses.replace(
             lanes, steps_done=self._freeze(lanes.steps_done,
                                            jnp.int32(lane)))

@@ -18,10 +18,48 @@ from typing import Optional, Sequence
 
 import jax
 
+from repro import obs
 from repro.core import perks
 from repro.exec.plan import Plan
 from repro.exec.problem import Problem
 from repro.exec import planner as _planner
+
+
+def _record_plan_metrics(plan: Plan) -> None:
+    """Executor-level counters the service layer can't see (DESIGN.md
+    §11): barriers, fused steps per HBM pass, bytes resident vs streamed
+    per CacheDecision, collective rounds. Derived from the Plan — the
+    executed program's structure IS the plan's structure."""
+    mx = obs.get_metrics()
+    mx.counter("executor_executions_total", tier=plan.tier).inc()
+    mx.counter("executor_barriers_total", tier=plan.tier).inc(plan.barriers)
+    mx.gauge("executor_fused_steps_per_pass", tier=plan.tier).set(
+        plan.fuse_steps)
+    if plan.cache:
+        streamed = sum(d.total_bytes - d.cached_bytes for d in plan.cache)
+        mx.counter("executor_cache_decisions_total").inc(len(plan.cache))
+        mx.counter("executor_bytes_cached_total").inc(plan.cached_bytes)
+        mx.counter("executor_bytes_streamed_total").inc(streamed)
+    if plan.tier == "distributed":
+        mx.counter("executor_collective_rounds_total").inc(plan.barriers)
+
+
+def _traced_on_sync(tracer, on_sync, track: str, problem_name: str):
+    """Wrap (or stand in for) a problem's ``on_sync`` so every host-sync
+    barrier of a loop-tier run lands in the trace as a chunk + barrier
+    event pair. Pure host-side bookkeeping: the wrapped callback's verdict
+    is returned unchanged (and False when there was no callback), so
+    traced execution is bit-identical to untraced."""
+
+    def synced(state, k):
+        tracer.event("chunk", cat="chunk", track=track,
+                     problem=problem_name, steps_done=k)
+        stop = False if on_sync is None else bool(on_sync(state, k))
+        tracer.event("barrier", cat="barrier", track=track,
+                     problem=problem_name, steps_done=k, stop=stop)
+        return stop
+
+    return synced
 
 
 def execute(problem: Problem, plan: Plan, *, mesh=None):
@@ -31,7 +69,11 @@ def execute(problem: Problem, plan: Plan, *, mesh=None):
     plan the executor routes through the identical combinators/kernels,
     so results are bit-identical (<= 2 ulp where ``fuse_steps > 1``
     changes window shapes, DESIGN.md §4 — the same bound the legacy
-    paths carry).
+    paths carry). The ambient observability context (``repro.obs``) sees
+    every call: executor counters always, span/chunk/barrier/cache trace
+    events when a real tracer is installed, and a predicted-vs-measured
+    row in the drift ledger when one is active (the ledger blocks on the
+    result to time it — values are unchanged, only laziness).
     """
     if plan.n_steps and plan.n_steps != problem.n_steps:
         raise ValueError(
@@ -61,6 +103,48 @@ def execute(problem: Problem, plan: Plan, *, mesh=None):
             f"{plan.tier} plan has no host-sync points (sync_every="
             f"{plan.sync_every}); running all {problem.n_steps} steps",
             RuntimeWarning, stacklevel=2)
+    if plan.tier == "distributed" and mesh is None:
+        raise ValueError("distributed plan needs mesh=")
+    tr = obs.get_tracer()
+    ledger = obs.get_ledger()
+    _record_plan_metrics(plan)
+    track = f"tier:{plan.tier}"
+    if tr.enabled:
+        for d in plan.cache:
+            tr.event(f"cache:{d.name}", cat="cache", track=track,
+                     problem=problem.name, cached_bytes=d.cached_bytes,
+                     total_bytes=d.total_bytes, fraction=d.fraction)
+    span = (tr.span(f"execute:{problem.name}", cat="dispatch", track=track,
+                    tier=plan.tier, fuse_steps=plan.fuse_steps,
+                    batch=plan.batch, n_steps=problem.n_steps,
+                    barriers=plan.barriers) if tr.enabled
+            else _noop_span)
+    t0 = time.perf_counter() if ledger is not None else 0.0
+    with span:
+        result = _dispatch(problem, plan, mesh, on_sync, tr, track)
+        if ledger is not None:
+            result = jax.block_until_ready(result)
+    if ledger is not None:
+        ledger.record(problem, plan, time.perf_counter() - t0)
+    return result
+
+
+class _NoopSpan:
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+_noop_span = _NoopSpan()
+
+
+def _dispatch(problem: Problem, plan: Plan, mesh, on_sync, tracer, track):
+    """The tier dispatch proper (validation and observability live in
+    ``execute``)."""
     if plan.tier == "distributed":
         if mesh is None:
             raise ValueError("distributed plan needs mesh=")
@@ -71,8 +155,12 @@ def execute(problem: Problem, plan: Plan, *, mesh=None):
                  else perks.Execution.DEVICE_LOOP)
     cfg = perks.PerksConfig(execution=execution, sync_every=plan.sync_every,
                             fuse_steps=plan.fuse_steps)
+    if tracer.enabled and honors_on_sync(plan, problem.n_steps):
+        on_sync = _traced_on_sync(tracer, on_sync, track, problem.name)
     runner = perks.persistent(problem.step_fn(), problem.n_steps, cfg,
                               on_sync=on_sync)
+    obs.get_metrics().counter("executor_retraces_total",
+                              tier=plan.tier).inc()
     return problem.finalize(runner(problem.initial_state()))
 
 
@@ -139,7 +227,7 @@ def _time_once(fn, warmup: int, iters: int) -> float:
 
 def autotune(problem: Problem, candidates: Optional[Sequence[Plan]] = None,
              *, chip=None, mesh=None, top_k: int = 4, warmup: int = 1,
-             iters: int = 3, **plan_kw) -> AutotuneResult:
+             iters: int = 3, ledger=None, **plan_kw) -> AutotuneResult:
     """Measure the top-``top_k`` planner candidates and return the winner.
 
     ``candidates`` defaults to ``plan_candidates(problem, ...)``
@@ -147,20 +235,44 @@ def autotune(problem: Problem, candidates: Optional[Sequence[Plan]] = None,
     ``table`` keeps the planner's predicted order so callers can report
     predicted-vs-measured per candidate (the ``exec_plan_*`` benchmark
     rows); ``best`` is the measured winner.
+
+    ``ledger`` (default: the ambient ``repro.obs.get_ledger()``) is the
+    persisted drift ledger: a candidate this ledger has already timed on
+    this chip/jax version is NOT re-measured — its stored ``measured_s``
+    fills the row (``ledger.hits`` counts the skips) — and every fresh
+    measurement plus the empirical winner is written back, so the next
+    process starts from this one's evidence (ROADMAP item 5).
     """
     if candidates is None:
         kw = dict(plan_kw)
         if chip is not None:
             kw["chip"] = chip
         candidates = _planner.plan_candidates(problem, mesh=mesh, **kw)
+    if ledger is None:
+        ledger = obs.get_ledger()
+    tr = obs.get_tracer()
     runnable = [p for p in candidates
                 if p.tier != "distributed" or mesh is not None]
     if not runnable:
         raise ValueError("no runnable candidates for this problem/host")
     rows = []
     for p in runnable[:max(1, top_k)]:
-        measured = _time_once(lambda: execute(problem, p, mesh=mesh),
-                              warmup, iters)
-        rows.append(TimingRow(p, p.predicted_s, measured))
+        rec = ledger.lookup(problem, p) if ledger is not None else None
+        if rec is not None:
+            measured = rec.measured_s
+        else:
+            measured = _time_once(lambda: execute(problem, p, mesh=mesh),
+                                  warmup, iters)
+            if ledger is not None:
+                ledger.record(problem, p, measured)
+        row = TimingRow(p, p.predicted_s, measured)
+        if tr.enabled:
+            tr.event("autotune_measure", cat="measure", track="autotune",
+                     problem=problem.name, plan=obs.plan_signature(p),
+                     predicted_s=p.predicted_s, measured_s=measured,
+                     from_ledger=rec is not None)
+        rows.append(row)
     best = min(rows, key=lambda r: r.measured_s).plan
+    if ledger is not None:
+        ledger.set_best(problem, best)
     return AutotuneResult(best=best, table=tuple(rows))

@@ -292,7 +292,7 @@ def plan_candidates(problem: Problem, *, chip=TPU_V5E, mesh=None,
                     budget_bytes: Optional[int] = None, max_fuse: int = 4,
                     shard_axis: str = "data", sub_rows: int = 128,
                     sync_every: Optional[int] = None,
-                    batch: int = 1) -> list[Plan]:
+                    batch: int = 1, ledger=None) -> list[Plan]:
     """Every candidate Plan for ``problem``, ranked by projected time.
 
     ``chip`` is a :class:`~repro.core.hardware.Chip` or a name from
@@ -305,7 +305,13 @@ def plan_candidates(problem: Problem, *, chip=TPU_V5E, mesh=None,
     budgets scale with B, dispatch/barrier overheads do not, so tiers and
     fuse depths re-rank under the B-scaled working set. Passing a
     :class:`~repro.exec.batch.BatchedProblem` infers ``batch`` from it.
+
+    ``ledger`` (default: the ambient ``repro.obs.get_ledger()``) re-ranks
+    with measured evidence: candidates the drift ledger has timed on this
+    chip/jax version outrank the purely-projected ones, ordered by their
+    measured seconds (DESIGN.md §11).
     """
+    from repro import obs
     from repro.exec.batch import BatchedProblem
     chip = _budget_chip(_as_chip(chip), budget_bytes)
     if max_fuse < 1:
@@ -332,18 +338,30 @@ def plan_candidates(problem: Problem, *, chip=TPU_V5E, mesh=None,
         raise NotImplementedError(
             f"no candidate generator for problem kind {template.kind!r}")
     cands = [c for c in cands if problem.supports(c.tier)]
-    return _rank(cands)
+    cands = _rank(cands)
+    if ledger is None:
+        ledger = obs.get_ledger()
+    if ledger is not None:
+        cands = ledger.rerank(problem, cands)
+    tr = obs.get_tracer()
+    if tr.enabled and cands:
+        tr.event(f"plan:{name}", cat="plan", track="planner",
+                 n_candidates=len(cands), best_tier=cands[0].tier,
+                 best_predicted_s=cands[0].predicted_s, batch=batch)
+    return cands
 
 
 def plan(problem: Problem, *, chip=TPU_V5E, mesh=None,
          budget_bytes: Optional[int] = None, max_fuse: int = 4,
          shard_axis: str = "data", sub_rows: int = 128,
-         sync_every: Optional[int] = None, batch: int = 1) -> Plan:
-    """The planner's top candidate (lowest projected time) for ``problem``."""
+         sync_every: Optional[int] = None, batch: int = 1,
+         ledger=None) -> Plan:
+    """The planner's top candidate for ``problem``: lowest measured time
+    where the drift ledger has evidence, lowest projected time otherwise."""
     return plan_candidates(
         problem, chip=chip, mesh=mesh, budget_bytes=budget_bytes,
         max_fuse=max_fuse, shard_axis=shard_axis, sub_rows=sub_rows,
-        sync_every=sync_every, batch=batch)[0]
+        sync_every=sync_every, batch=batch, ledger=ledger)[0]
 
 
 # -- legacy planner surfaces (delegated to by the solver shims) ----------------

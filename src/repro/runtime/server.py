@@ -5,17 +5,84 @@ generates with ``Model.decode_loop`` — N tokens per dispatch with a donated
 cache (the paper's persistent-kernel execution applied to serving). The
 baseline mode dispatches ``decode_step`` per token for the benchmark
 comparison (benchmarks/decode_bench.py).
+
+:func:`start_metrics_server` exposes any :class:`repro.obs.MetricsRegistry`
+(the ambient one by default) over HTTP in the Prometheus text exposition
+format — point a scraper at ``GET /metrics`` (DESIGN.md §11).
 """
 from __future__ import annotations
 
 import dataclasses
+import http.server
+import threading
 import time
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.models.lm import Model
+
+
+class MetricsServer:
+    """A daemon-threaded HTTP server serving one registry at /metrics."""
+
+    def __init__(self, registry: obs.MetricsRegistry, host: str, port: int):
+        self.registry = registry
+
+        server = self
+
+        class Handler(http.server.BaseHTTPRequestHandler):
+            def do_GET(self):
+                if self.path.rstrip("/") != "/metrics":
+                    self.send_error(404, "only /metrics is served here")
+                    return
+                body = server.registry.prometheus_text().encode()
+                self.send_response(200)
+                self.send_header("Content-Type",
+                                 "text/plain; version=0.0.4; charset=utf-8")
+                self.send_header("Content-Length", str(len(body)))
+                self.end_headers()
+                self.wfile.write(body)
+
+            def log_message(self, *a):     # scrapes are not stdout events
+                pass
+
+        self._httpd = http.server.ThreadingHTTPServer((host, port), Handler)
+        self.host = host
+        self.port = self._httpd.server_address[1]
+        self._thread = threading.Thread(target=self._httpd.serve_forever,
+                                        daemon=True)
+        self._thread.start()
+
+    def url(self) -> str:
+        return f"http://{self.host}:{self.port}/metrics"
+
+    def close(self) -> None:
+        self._httpd.shutdown()
+        self._httpd.server_close()
+        self._thread.join(timeout=5)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+
+def start_metrics_server(registry: Optional[obs.MetricsRegistry] = None, *,
+                         host: str = "127.0.0.1",
+                         port: int = 0) -> MetricsServer:
+    """Serve ``registry`` (default: the ambient metrics registry) at
+    ``GET /metrics`` in Prometheus text format. ``port=0`` picks a free
+    port (read it back from ``.port``). The server runs on a daemon
+    thread; call ``.close()`` (or use as a context manager) to stop."""
+    if registry is None:
+        registry = obs.get_metrics()
+    return MetricsServer(registry, host, port)
 
 
 @dataclasses.dataclass
@@ -32,10 +99,12 @@ class ServeConfig:
 
 
 class Engine:
-    def __init__(self, model: Model, params, cfg: ServeConfig = ServeConfig()):
+    def __init__(self, model: Model, params, cfg: ServeConfig = ServeConfig(),
+                 *, metrics: Optional[obs.MetricsRegistry] = None):
         self.model = model
         self.params = params
         self.cfg = cfg
+        self.metrics = metrics if metrics is not None else obs.MetricsRegistry()
         self._queue: list[Request] = []
         self._prefill = jax.jit(
             lambda p, b, n: model.prefill(p, b, cache_seq=n),
@@ -79,11 +148,17 @@ class Engine:
                 out_list.append(np.asarray(tok))
             out = np.stack(out_list, axis=1)
         t_decode = time.time() - t0
+        mode = "persistent" if self.cfg.persistent else "host_loop"
+        mx = self.metrics
+        mx.counter("server_batches_total", mode=mode).inc()
+        mx.counter("server_tokens_total", mode=mode).inc(len(batch) * new)
+        mx.counter("server_prefill_s_total").inc(t_prefill)
+        mx.counter("server_decode_s_total", mode=mode).inc(t_decode)
         stats = {
             "batch": len(batch),
             "prefill_s": t_prefill,
             "decode_s": t_decode,
             "tok_per_s": len(batch) * new / max(t_decode, 1e-9),
-            "mode": "persistent" if self.cfg.persistent else "host_loop",
+            "mode": mode,
         }
         return out, stats

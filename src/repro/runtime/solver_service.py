@@ -46,12 +46,23 @@ from typing import Any, Callable, Optional
 
 import jax
 
+from repro import obs
 from repro.core import perks
 from repro.exec.batch import BatchedProblem, LaneRunner, LaneState
 from repro.exec.executor import execute, honors_on_sync
 from repro.exec.plan import Plan
 from repro.exec.planner import plan_candidates
 from repro.exec.problem import Problem
+
+#: The stats() keys BOTH services guarantee, with identical semantics —
+#: the schema a dashboard can rely on regardless of which engine serves
+#: (DESIGN.md §11). Keys beyond this set are engine-specific.
+CORE_STATS_KEYS = frozenset({
+    "served", "instances_per_s", "plan_s_total",
+    "mean_queued_s", "p50_queued_s", "p99_queued_s",
+    "mean_latency_s", "p50_latency_s", "p99_latency_s",
+    "mean_exec_s", "p50_exec_s", "p99_exec_s",
+})
 
 
 @dataclasses.dataclass(frozen=True)
@@ -107,7 +118,7 @@ class SolverService:
     """
 
     def __init__(self, cfg: ServiceConfig = ServiceConfig(), *, mesh=None,
-                 clock=time.perf_counter):
+                 clock=time.perf_counter, metrics=None, tracer=None):
         self.cfg = cfg
         self.mesh = mesh
         self._clock = clock
@@ -116,13 +127,16 @@ class SolverService:
         # batch_key -> (chosen Plan, template problem pinning operand ids,
         # steady-state runner or None); see _make_runner
         self._plans: dict[tuple, tuple[Plan, Problem, Optional[Callable]]] = {}
-        self._served = 0
-        self._batches = 0
-        self._padded_lanes = 0
-        self._exec_s_total = 0.0
-        self._queued_s_total = 0.0
-        self._latency_s_total = 0.0
-        self._plan_s_total = 0.0
+        # every service counter lives in a MetricsRegistry and stats() is a
+        # thin view over it (DESIGN.md §11). The default is a PRIVATE
+        # registry, not the ambient one, so two services never alias each
+        # other's counters; pass a shared registry to aggregate across
+        # services or export through one Prometheus endpoint.
+        self.metrics = metrics if metrics is not None else obs.MetricsRegistry()
+        self._tracer = tracer
+
+    def _tr(self):
+        return self._tracer if self._tracer is not None else obs.get_tracer()
 
     # -- intake ---------------------------------------------------------------
 
@@ -219,7 +233,15 @@ class SolverService:
             cached = (chosen, bp.template, self._make_runner(bp, chosen))
             self._plans[key] = cached
             plan_s = self._clock() - t_plan
-            self._plan_s_total += plan_s
+            self.metrics.counter("service_plan_s_total").inc(plan_s)
+            if chosen.cache:
+                streamed = sum(d.total_bytes - d.cached_bytes
+                               for d in chosen.cache)
+                self.metrics.counter(
+                    "service_cache_bytes_cached_total").inc(
+                        chosen.cached_bytes)
+                self.metrics.counter(
+                    "service_cache_bytes_streamed_total").inc(streamed)
             return cached[0], cached[2], plan_s
         return cached[0], cached[2], 0.0
 
@@ -233,6 +255,13 @@ class SolverService:
         bp = BatchedProblem.from_instances([p.problem for p in taken],
                                            pad_to=pad_to)
         chosen, runner, plan_s = self._plan_for(bp)
+        tr = self._tr()
+        span = (tr.span(f"serve_batch:{bp.name}", cat="dispatch",
+                        track="service", tier=chosen.tier,
+                        batch_size=len(taken), padded_to=bp.batch)
+                if tr.enabled else None)
+        if span is not None:
+            span.__enter__()
         t0 = self._clock()
         if runner is not None:
             result = jax.block_until_ready(runner(bp))
@@ -240,8 +269,11 @@ class SolverService:
             result = jax.block_until_ready(execute(bp, chosen,
                                                    mesh=self.mesh))
         t1 = self._clock()
+        if span is not None:
+            span.__exit__(None, None, None)
         per_request = bp.split(result)
 
+        mx = self.metrics
         out: dict[int, RequestResult] = {}
         for pend, res in zip(taken, per_request):
             rr = RequestResult(
@@ -251,12 +283,13 @@ class SolverService:
                 exec_s=t1 - t0, batch_size=len(taken), padded_to=bp.batch,
                 plan=chosen, plan_s=plan_s)
             out[pend.request_id] = rr
-            self._queued_s_total += rr.queued_s
-            self._latency_s_total += rr.latency_s
-        self._served += len(taken)
-        self._batches += 1
-        self._padded_lanes += bp.pad
-        self._exec_s_total += t1 - t0
+            mx.histogram("service_queued_s").observe(rr.queued_s)
+            mx.histogram("service_latency_s").observe(rr.latency_s)
+            mx.histogram("service_exec_s").observe(rr.exec_s)
+        mx.counter("service_served_total").inc(len(taken))
+        mx.counter("service_batches_total").inc()
+        mx.counter("service_padded_lanes_total").inc(bp.pad)
+        mx.counter("service_exec_s_total").inc(t1 - t0)
         return out
 
     def drain(self) -> dict[int, RequestResult]:
@@ -269,20 +302,30 @@ class SolverService:
     # -- telemetry ------------------------------------------------------------
 
     def stats(self) -> dict[str, float]:
-        served = max(1, self._served)
-        dispatched = self._served + self._padded_lanes
-        return {
-            "served": self._served,
-            "batches": self._batches,
-            "mean_batch_size": self._served / max(1, self._batches),
-            "pad_fraction": self._padded_lanes / max(1, dispatched),
-            "mean_queued_s": self._queued_s_total / served,
-            "mean_latency_s": self._latency_s_total / served,
-            "exec_s_total": self._exec_s_total,
-            "plan_s_total": self._plan_s_total,
-            "instances_per_s": self._served / max(1e-9, self._exec_s_total),
+        """A thin view over :attr:`metrics` — every number here IS a
+        registry metric (or a ratio of two). Guarantees
+        :data:`CORE_STATS_KEYS`; the extra keys are engine-specific."""
+        mx = self.metrics
+        served = mx.value("service_served_total")
+        batches = mx.value("service_batches_total")
+        padded = mx.value("service_padded_lanes_total")
+        exec_s_total = mx.value("service_exec_s_total")
+        out = {
+            "served": served,
+            "batches": batches,
+            "mean_batch_size": served / max(1, batches),
+            "pad_fraction": padded / max(1, served + padded),
+            "exec_s_total": exec_s_total,
+            "plan_s_total": mx.value("service_plan_s_total"),
+            "instances_per_s": served / max(1e-9, exec_s_total),
             "distinct_plans": len(self._plans),
         }
+        for name in ("queued", "latency", "exec"):
+            h = mx.histogram(f"service_{name}_s")
+            out[f"mean_{name}_s"] = h.mean
+            out[f"p50_{name}_s"] = h.percentile(0.50)
+            out[f"p99_{name}_s"] = h.percentile(0.99)
+        return out
 
     def chosen_plans(self) -> dict[tuple, Plan]:
         """The Plan each batch key executed under (loggable artifacts)."""
@@ -416,7 +459,7 @@ class AsyncSolverService:
     """
 
     def __init__(self, cfg: AsyncConfig = AsyncConfig(), *,
-                 clock=time.perf_counter):
+                 clock=time.perf_counter, metrics=None, tracer=None):
         self.cfg = cfg
         self._clock = clock
         self._queue: list[_Pending] = []
@@ -428,21 +471,14 @@ class AsyncSolverService:
         self._trace: Optional[list] = None    # (offset_s, problem) replay
         self._trace_i = 0
         self._trace_t0 = 0.0
-        # telemetry
-        self._served = 0
-        self._groups_activated = 0
-        self._barriers = 0
-        self._admitted_mid_solve = 0
-        self._retired_early = 0
-        self._rejected = 0
-        self._shed = 0
+        # telemetry: every counter/percentile behind stats() lives in a
+        # MetricsRegistry (private by default — see SolverService.__init__)
+        self.metrics = metrics if metrics is not None else obs.MetricsRegistry()
+        self._tracer = tracer
         self._shed_ids: list[int] = []
-        self._sla_misses = 0
-        self._busy_s = 0.0
-        self._occupied_lane_barriers = 0
-        self._queued: list[float] = []
-        self._latencies: list[float] = []
-        self._execs: list[float] = []
+
+    def _tr(self):
+        return self._tracer if self._tracer is not None else obs.get_tracer()
 
     # -- intake ----------------------------------------------------------------
 
@@ -460,12 +496,12 @@ class AsyncSolverService:
                             "owns the lane batching")
         if len(self._queue) >= self.cfg.max_queue:
             if self.cfg.overload == "reject":
-                self._rejected += 1
+                self.metrics.counter("async_rejected_total").inc()
                 raise ServiceOverloaded(
                     f"queue full ({self.cfg.max_queue} waiting); "
                     f"resubmit after draining or use overload='shed'")
             dropped = self._queue.pop(0)
-            self._shed += 1
+            self.metrics.counter("async_shed_total").inc()
             self._shed_ids.append(dropped.request_id)
         rid = self._next_id
         self._next_id += 1
@@ -501,13 +537,21 @@ class AsyncSolverService:
         chunk = max(1, min(chunk, n))
         plan = dataclasses.replace(chosen, tier="device_loop",
                                    sync_every=chunk, batch=width)
-        runner = LaneRunner(template, width)
+        runner = LaneRunner(template, width, tracer=self._tracer)
         drive = perks.chunked_loop(runner.step_fn(), None, sync_every=chunk,
                                    on_barrier=self._barrier)
         prog = _Program(template=template, plan=plan, chunk=chunk,
                         runner=runner, drive=drive,
                         plan_s=self._clock() - t_plan)
         self._programs[key] = prog
+        self.metrics.counter("async_plan_s_total").inc(prog.plan_s)
+        if plan.cache:
+            streamed = sum(d.total_bytes - d.cached_bytes
+                           for d in plan.cache)
+            self.metrics.counter("async_cache_bytes_cached_total").inc(
+                plan.cached_bytes)
+            self.metrics.counter("async_cache_bytes_streamed_total").inc(
+                streamed)
         return prog
 
     def evict_programs(self) -> int:
@@ -532,7 +576,7 @@ class AsyncSolverService:
                    slots=[_Lane() for _ in range(prog.runner.width)],
                    plan_s=plan_s)
         self._group = g
-        self._groups_activated += 1
+        self.metrics.counter("async_groups_total").inc()
         self._admit_waiting(g)
 
     def _admit_waiting(self, g: _Group) -> None:
@@ -550,10 +594,10 @@ class AsyncSolverService:
                         # already blew its queue-wait SLA: a lane spent on
                         # it is a lane taken from a request that can still
                         # meet its own — drop it here, at admission
-                        self._shed += 1
+                        self.metrics.counter("async_shed_total").inc()
                         self._shed_ids.append(p.request_id)
                         continue
-                    self._sla_misses += 1
+                    self.metrics.counter("async_sla_misses_total").inc()
                 lane = free.pop(0)
                 slot = g.slots[lane]
                 slot.pending = p
@@ -562,7 +606,8 @@ class AsyncSolverService:
                 slot.plan_s = g.plan_s if g.barriers == 0 else 0.0
                 g.lanes = g.prog.runner.admit(g.lanes, lane, p.problem)
                 if g.barriers > 0:
-                    self._admitted_mid_solve += 1
+                    self.metrics.counter(
+                        "async_admitted_mid_solve_total").inc()
             else:
                 kept.append(p)
         self._queue = kept
@@ -580,12 +625,13 @@ class AsyncSolverService:
             batch_size=batch_size, padded_to=g.prog.runner.width,
             plan=g.prog.plan, plan_s=slot.plan_s, steps=slot.steps)
         self._retired_now[pend.request_id] = rr
-        self._served += 1
+        mx = self.metrics
+        mx.counter("async_served_total").inc()
         if slot.steps < g.prog.runner.n_steps:
-            self._retired_early += 1
-        self._queued.append(rr.queued_s)
-        self._latencies.append(rr.latency_s)
-        self._execs.append(rr.exec_s)
+            mx.counter("async_retired_early_total").inc()
+        mx.histogram("async_queued_s").observe(rr.queued_s)
+        mx.histogram("async_latency_s").observe(rr.latency_s)
+        mx.histogram("async_exec_s").observe(rr.exec_s)
         slot.pending = None
         g.lanes = g.prog.runner.retire(g.lanes, lane)
 
@@ -598,20 +644,33 @@ class AsyncSolverService:
         g.lanes = dataclasses.replace(g.lanes, state=carry[0],
                                       steps_done=carry[1])
         g.barriers += 1
-        self._barriers += 1
+        mx = self.metrics
+        mx.counter("async_barriers_total").inc()
         self._inject_due_arrivals()
         now = self._clock()
         n = g.prog.runner.n_steps
         occupied = [i for i, s in enumerate(g.slots) if s.pending is not None]
-        self._occupied_lane_barriers += len(occupied)
+        mx.counter("async_occupied_lane_barriers_total").inc(len(occupied))
+        tr = self._tr()
+        track = f"lanes:{g.prog.template.name}"
+        if tr.enabled:
+            tr.event("chunk", cat="chunk", track=track, barrier=g.barriers,
+                     chunk_steps=g.prog.chunk, occupied=len(occupied))
         conv = g.prog.runner.convergence_vector(g.lanes)
+        retired = 0
         for i in occupied:
             slot = g.slots[i]
             slot.steps = min(slot.steps + g.prog.chunk, n)
             if slot.steps >= n or (conv is not None and bool(conv[i])):
                 self._retire_lane(g, i, now, batch_size=len(occupied))
+                retired += 1
         self._admit_waiting(g)
-        if not any(s.pending is not None for s in g.slots):
+        drained = not any(s.pending is not None for s in g.slots)
+        if tr.enabled:
+            tr.event("barrier", cat="barrier", track=track,
+                     barrier=g.barriers, retired=retired,
+                     waiting=len(self._queue), drained=drained)
+        if drained:
             self._group = None               # group drained; program stays
             return (g.lanes.state, g.lanes.steps_done), True
         if self._quantum is not None:
@@ -623,9 +682,18 @@ class AsyncSolverService:
     def _drive(self, quantum: Optional[int]) -> None:
         g = self._group
         self._quantum = quantum
+        tr = self._tr()
+        span = (tr.span(f"drive:{g.prog.template.name}", cat="dispatch",
+                        track=f"lanes:{g.prog.template.name}",
+                        width=g.prog.runner.width, chunk=g.prog.chunk)
+                if tr.enabled else None)
+        if span is not None:
+            span.__enter__()
         t0 = self._clock()
         carry = g.prog.drive((g.lanes.state, g.lanes.steps_done))
-        self._busy_s += self._clock() - t0
+        self.metrics.counter("async_busy_s_total").inc(self._clock() - t0)
+        if span is not None:
+            span.__exit__(None, None, None)
         if self._group is g:                 # paused, not drained
             g.lanes = dataclasses.replace(g.lanes, state=carry[0],
                                           steps_done=carry[1])
@@ -707,39 +775,38 @@ class AsyncSolverService:
     # -- telemetry -------------------------------------------------------------
 
     def stats(self) -> dict[str, float]:
-        """Engine counters plus p50/p99 queued/latency/exec percentiles."""
+        """Engine counters plus p50/p99 queued/latency/exec percentiles —
+        a thin view over :attr:`metrics` (same nearest-rank percentile
+        rule the engine always used, now owned by
+        :class:`repro.obs.Histogram`). Guarantees
+        :data:`CORE_STATS_KEYS`."""
+        mx = self.metrics
         width = self.cfg.max_batch
+        served = mx.value("async_served_total")
+        barriers = mx.value("async_barriers_total")
+        busy_s = mx.value("async_busy_s_total")
         out = {
-            "served": self._served,
-            "groups": self._groups_activated,
-            "barriers": self._barriers,
-            "admitted_mid_solve": self._admitted_mid_solve,
-            "retired_early": self._retired_early,
-            "rejected": self._rejected,
-            "shed": self._shed,
-            "sla_misses": self._sla_misses,
+            "served": served,
+            "groups": mx.value("async_groups_total"),
+            "barriers": barriers,
+            "admitted_mid_solve": mx.value("async_admitted_mid_solve_total"),
+            "retired_early": mx.value("async_retired_early_total"),
+            "rejected": mx.value("async_rejected_total"),
+            "shed": mx.value("async_shed_total"),
+            "sla_misses": mx.value("async_sla_misses_total"),
             "distinct_programs": len(self._programs),
-            "lane_occupancy": (self._occupied_lane_barriers
-                               / max(1, self._barriers * width)),
-            "busy_s": self._busy_s,
-            "instances_per_s": self._served / max(1e-9, self._busy_s),
+            "lane_occupancy": (mx.value("async_occupied_lane_barriers_total")
+                               / max(1, barriers * width)),
+            "busy_s": busy_s,
+            "plan_s_total": mx.value("async_plan_s_total"),
+            "instances_per_s": served / max(1e-9, busy_s),
         }
-        for name, xs in (("queued", self._queued),
-                         ("latency", self._latencies),
-                         ("exec", self._execs)):
-            out[f"p50_{name}_s"] = _percentile(xs, 0.50)
-            out[f"p99_{name}_s"] = _percentile(xs, 0.99)
-            out[f"mean_{name}_s"] = sum(xs) / max(1, len(xs))
+        for name in ("queued", "latency", "exec"):
+            h = mx.histogram(f"async_{name}_s")
+            out[f"p50_{name}_s"] = h.percentile(0.50)
+            out[f"p99_{name}_s"] = h.percentile(0.99)
+            out[f"mean_{name}_s"] = h.mean
         return out
 
     def chosen_plans(self) -> dict[tuple, Plan]:
         return {k: prog.plan for k, prog in self._programs.items()}
-
-
-def _percentile(xs: list, q: float) -> float:
-    """Nearest-rank percentile (0.0 for an empty sample)."""
-    if not xs:
-        return 0.0
-    xs = sorted(xs)
-    rank = max(1, int(-(-q * len(xs) // 1)))   # ceil without floats drift
-    return xs[min(len(xs), rank) - 1]
