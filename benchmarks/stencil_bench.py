@@ -9,12 +9,19 @@ cache the planner's row fraction (Fig. 5 regime).
 """
 from __future__ import annotations
 
+import json
+import os
+import sys
+
+# runnable directly (`python benchmarks/stencil_bench.py --record ...`)
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.util import time_fn, row
-from repro.core.cache_policy import gm_bytes_fused
+from repro.core.cache_policy import gm_bytes_deep, gm_bytes_fused
 from repro.core.hardware import TPU_V5E
 from repro.core.perf_model import project_host_loop, project_perks
 from repro.kernels.common import BENCHMARKS
@@ -44,15 +51,24 @@ def projected(spec, domain, steps=1000, chip=TPU_V5E):
     return cached / cells, base.t_total / perks.t_total, perks
 
 
-def run_fused(quick: bool = False):
-    """Temporal-blocking sweep (DESIGN.md §4, arXiv:2306.03336): the
-    streamed PERKS kernel at fuse_steps in {1, 2, 4}. Measured wall clock
-    is CPU interpret-mode (relative trend only); the derived column
-    carries the structural win — HBM passes and projected traffic from
-    the generalized Eq. 5 (``cache_policy.gm_bytes_fused``)."""
+def run_fused(quick: bool = False, record_path: str | None = None):
+    """Temporal-blocking sweep (DESIGN.md §4/§12, arXiv:2306.03336):
+    the streamed PERKS kernel — SHALLOW schedule at fuse_steps in
+    {1, 2, 4} (``stencil_fuse_*`` rows; the r*t recompute window caps
+    useful depth), then the DEEP wavefront schedule at fuse_steps in
+    {1, 2, 4, 8, 16} (``stencil_deep_*`` rows). Measured wall clock is
+    CPU interpret-mode (relative trend only); the derived columns carry
+    the structural win — HBM passes and projected traffic from
+    ``cache_policy.gm_bytes_fused``/``gm_bytes_deep``. Each deep row also
+    reports ``shallow_t4_gm`` (the best shallow depth's traffic at the
+    SAME step count), the comparison CI gates on: deep t=8 must beat
+    shallow t=4. ``record_path`` appends the sweep to the committed
+    ``benchmarks/BENCH_stencil.json`` history."""
     names = ["2d5pt", "3d7pt"] if quick else ["2d5pt", "2ds9pt", "2d9pt",
                                               "3d7pt", "poisson"]
     steps = 8
+    deep_steps = 16
+    entries = []
     for name in names:
         spec = BENCHMARKS[name]
         shape = (48, 64) if spec.ndim == 2 else (24, 8, 16)
@@ -72,6 +88,43 @@ def run_fused(quick: bool = False):
             row(f"stencil_fuse_{name}_t{t}", tf / steps * 1e6,
                 f"hbm_passes={-(-steps // t)};gm_bytes={gm:.0f};"
                 f"interp_speedup={base_us / tf:.2f}x")
+            entries.append({
+                "name": name, "schedule": "shallow", "t": t, "steps": steps,
+                "us_per_step": round(tf / steps * 1e6, 3),
+                "gm_bytes": gm, "hbm_passes": -(-steps // t)})
+        # deep sweep runs more steps so t=16 still completes a full pass
+        shallow_t4 = gm_bytes_fused(deep_steps, dom_bytes,
+                                    cached * row_bytes, row_bytes=row_bytes,
+                                    radius=spec.radius, fuse_steps=4)
+        base_us = None
+        for t in (1, 2, 4, 8, 16):
+            tf, _ = time_fn(lambda: ssol.run_resident(
+                x, spec, deep_steps, cached_rows=cached, sub_rows=32,
+                fuse_steps=t, schedule="deep"), warmup=1, iters=3)
+            base_us = base_us or tf
+            gm = gm_bytes_deep(deep_steps, dom_bytes, cached * row_bytes,
+                               fuse_steps=t)
+            row(f"stencil_deep_{name}_t{t}", tf / deep_steps * 1e6,
+                f"hbm_passes={-(-deep_steps // t)};gm_bytes={gm:.0f};"
+                f"shallow_t4_gm={shallow_t4:.0f};"
+                f"interp_speedup={base_us / tf:.2f}x")
+            entries.append({
+                "name": name, "schedule": "deep", "t": t,
+                "steps": deep_steps,
+                "us_per_step": round(tf / deep_steps * 1e6, 3),
+                "gm_bytes": gm, "shallow_t4_gm": shallow_t4,
+                "hbm_passes": -(-deep_steps // t)})
+    if record_path:
+        try:
+            history = json.load(open(record_path))
+        except (FileNotFoundError, json.JSONDecodeError):
+            history = []
+        history.append({"quick": quick, "jax": jax.__version__,
+                        "entries": entries})
+        with open(record_path, "w") as f:
+            json.dump(history, f, indent=2)
+            f.write("\n")
+    return entries
 
 
 def run(domain_kind: str = "large", quick: bool = False, chip=TPU_V5E):
@@ -96,3 +149,15 @@ def run(domain_kind: str = "large", quick: bool = False, chip=TPU_V5E):
     gm = float(np.exp(np.mean(np.log(speedups))))
     row(f"stencil_{domain_kind}_geomean", 0.0, f"speedup={gm:.2f}x")
     return gm
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--record", default=None,
+                    help="append the shallow-vs-deep sweep to this JSON "
+                         "history (benchmarks/BENCH_stencil.json)")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run_fused(quick=not args.full, record_path=args.record)

@@ -199,6 +199,45 @@ def gm_bytes_fused(
     return passes * (2.0 * uncached + overlap) + 2.0 * cached_bytes
 
 
+def gm_bytes_deep(
+    n_steps: int,
+    domain_bytes: int,
+    cached_bytes: int,
+    *,
+    fuse_steps: int,
+) -> float:
+    """Eq. 5 under DEEP temporal blocking (arXiv:2306.03336; the wavefront
+    schedule of ``kernels.stencil2d.stencil_perks_deep``).
+
+    Each pass advances t time steps while reading and writing every
+    uncached row exactly ONCE — the inter-block halos ride in VMEM edge
+    stashes, so there is no ``2*r*t`` overlap re-read and no per-pass
+    resident-edge traffic:
+
+        A_gm = ceil(N/t) * 2*D_uncached + 2*D_cached
+
+    Monotonically non-increasing in t at fixed cache (the planner
+    property test pins this), unlike ``gm_bytes_fused`` whose overlap
+    term is constant per step. The cost of depth moves entirely into the
+    scratch working set (``deep_scratch_rows``), where it competes with
+    resident rows for VMEM instead of with HBM bandwidth.
+    """
+    t = fuse_steps
+    passes = -(-n_steps // t)
+    uncached = max(0, domain_bytes - cached_bytes)
+    return passes * 2.0 * uncached + 2.0 * cached_bytes
+
+
+def deep_scratch_rows(sub_rows: int, radius: int, fuse_steps: int) -> int:
+    """VMEM working-set rows of the deep wavefront kernel beyond the
+    resident region: (2t+3) block buffers (triple-buffered level 0 for
+    DMA overlap, one ping-pong pair per inner level, a double-buffered
+    write-back) plus (t+1) radius-row edge stashes — exactly
+    ``kernels.stencil2d._deep_scratch_shapes`` in row units. Linear in t:
+    this is where deep blocking pays for its depth."""
+    return (2 * fuse_steps + 3) * sub_rows + (fuse_steps + 1) * radius
+
+
 def plan_fuse_steps(
     n_steps: int,
     shard_rows: int,

@@ -50,6 +50,22 @@ def stack_payloads(problems: Sequence[Problem]):
                         *[p.payload() for p in problems])
 
 
+def per_instance_chip(chip, batch: int):
+    """The on-chip budget ONE instance of a B-wide batch may plan against.
+
+    A vmapped resident dispatch runs B kernel instances concurrently, so
+    residency *and scratch* (shallow streaming windows, deep wavefront
+    buffers — ``core.cache_policy.deep_scratch_rows``) share the physical
+    VMEM. Scaling ``onchip_bytes`` by 1/B is how the planner makes a
+    batched problem first demote temporal-blocking depth (whose scratch
+    is per-instance) and then resident rows, rather than emitting plans
+    whose combined working set oversubscribes the chip (DESIGN.md §8/§12).
+    """
+    if batch <= 1:
+        return chip
+    return dataclasses.replace(chip, onchip_bytes=chip.onchip_bytes / batch)
+
+
 class BatchedProblem(Problem):
     """B independent instances of one problem family as a single Problem.
 

@@ -25,6 +25,11 @@ TIERS = ("host_loop", "device_loop", "resident", "distributed")
 #: Row-partition strategies for the distributed tier.
 PARTITIONS = ("rows", "nnz")
 
+#: Resident-tier temporal-blocking schedules (DESIGN.md §4/§12):
+#: "shallow" = r*t-wide redundant-recompute windows (stencil_perks),
+#: "deep" = wavefront scratchpad scheme (stencil_perks_deep).
+SCHEDULES = ("shallow", "deep")
+
 
 @dataclasses.dataclass(frozen=True)
 class CacheDecision:
@@ -63,6 +68,11 @@ class Plan:
     batch: int = 1
     # temporal blocking / host sync (DESIGN.md §4)
     fuse_steps: int = 1
+    #: which resident-tier blocking schedule runs the fused steps
+    #: (DESIGN.md §12): "shallow" recomputes r*t-wide windows, "deep" is
+    #: the wavefront scratchpad scheme — same arithmetic, different
+    #: traffic/scratch economics. Loop/distributed tiers ignore it.
+    schedule: str = "shallow"
     sync_every: Optional[int] = None
     # cache assignment (what stays on-chip across steps)
     cache: tuple[CacheDecision, ...] = ()
@@ -113,6 +123,56 @@ class Plan:
             raise ValueError(
                 f"precision must be one of {PRECISIONS}, got "
                 f"{self.precision!r}")
+        if self.schedule not in SCHEDULES:
+            raise ValueError(
+                f"schedule must be one of {SCHEDULES}, got "
+                f"{self.schedule!r}")
+
+    # -- kernel-feasibility validation ----------------------------------------
+
+    def validate(self, *, radius: Optional[int] = None,
+                 domain_rows: Optional[int] = None) -> "Plan":
+        """Reject plans the resident kernels cannot legally run, with a
+        message that names the violated constraint — the executor-level
+        home of what used to be a bare ``assert`` inside ``stencil_perks``.
+
+        ``radius``/``domain_rows`` come from the problem (a Plan does not
+        know the stencil geometry); when omitted, only geometry-free
+        checks run. Returns ``self`` so call sites can chain. Raises
+        :class:`ValueError` on the first violation.
+        """
+        if self.tier != "resident" or radius is None:
+            return self
+        r = radius
+        eff_t = min(self.fuse_steps, self.n_steps) if self.n_steps \
+            else self.fuse_steps
+        if self.schedule == "shallow":
+            need = r * eff_t
+            if self.sub_rows < need:
+                raise ValueError(
+                    f"shallow resident plan is infeasible: sub_rows="
+                    f"{self.sub_rows} < radius*fuse_steps = {r}*{eff_t} = "
+                    f"{need} — the streaming subtile cannot carry the "
+                    f"fused halo. Shrink fuse_steps, grow sub_rows, or "
+                    f"use schedule='deep' (needs only sub_rows >= radius)")
+        else:
+            if self.sub_rows < r:
+                raise ValueError(
+                    f"deep resident plan is infeasible: sub_rows="
+                    f"{self.sub_rows} < radius = {r} — one wavefront "
+                    f"block must carry a single level's halo")
+        cached = self.cached_rows
+        if cached is not None and domain_rows is not None:
+            if cached > domain_rows:
+                raise ValueError(
+                    f"resident plan caches {cached} rows of a "
+                    f"{domain_rows}-row domain")
+            if 0 < cached < domain_rows and cached < r:
+                raise ValueError(
+                    f"resident plan is infeasible: cached_rows={cached} "
+                    f"< radius={r} — partial caching needs at least one "
+                    f"halo's worth of resident rows")
+        return self
 
     # -- derived quantities ---------------------------------------------------
 

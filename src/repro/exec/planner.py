@@ -23,6 +23,8 @@ from typing import Optional, Sequence
 
 from repro.core.cache_policy import (
     cg_arrays,
+    deep_scratch_rows,
+    gm_bytes_deep,
     gm_bytes_fused,
     plan_caching,
 )
@@ -39,6 +41,14 @@ DISPATCH_OVERHEAD_S = 5e-6
 
 #: Per-collective latency floor (one psum/ppermute round on the ICI).
 COLLECTIVE_LATENCY_S = 2e-6
+
+#: Depth ceiling for DEEP resident candidates (DESIGN.md §12). The shallow
+#: schedule's r*t redundant-recompute window makes depths past ~4 a net
+#: loss, so ``max_fuse`` defaults to 4 — but the wavefront schedule has no
+#: such window, so when deep is legal the planner enumerates depths up to
+#: max(max_fuse, DEEP_MAX_FUSE), gated only by the wavefront scratch
+#: fitting in VMEM next to the resident rows.
+DEEP_MAX_FUSE = 32
 
 
 def _as_chip(chip) -> Chip:
@@ -99,8 +109,8 @@ def _stencil_candidates(problem, chip: Chip, mesh, *, max_fuse: int,
     # Each instance of a batch gets 1/B of the on-chip budget — the
     # B-scaled working set (DESIGN.md §8) — so large batches naturally
     # demote toward the loop tiers.
-    chip_per_inst = (chip if B == 1 else dataclasses.replace(
-        chip, onchip_bytes=chip.onchip_bytes / B))
+    from repro.exec.batch import per_instance_chip
+    chip_per_inst = per_instance_chip(chip, B)
     t = 1
     while t <= max(1, min(max_fuse, n)):
         rows = plan_resident_planes(shape, db, problem.spec,
@@ -115,6 +125,38 @@ def _stencil_candidates(problem, chip: Chip, mesh, *, max_fuse: int,
         cands.append(Plan(
             tier="resident", fuse_steps=t, cached_rows=rows,
             sub_rows=sub_rows,
+            cache=(CacheDecision("domain_rows", B * cached_bytes,
+                                 B * domain_bytes),),
+            predicted_s=max(t_gm, t_sm) + DISPATCH_OVERHEAD_S,
+            predicted_bound=bound, **common))
+        t *= 2
+
+    # RESIDENT × DEEP wavefront schedule (DESIGN.md §12): each streaming
+    # pass reads and writes every uncached row exactly once regardless of
+    # t, so depth is no longer capped by the shallow r*t recompute window.
+    # The B-scaled scratch gate runs BEFORE the candidate is emitted —
+    # the planner must never offer a deep plan whose wavefront buffers
+    # (per-instance, so ×B across a batched dispatch) exceed the chip's
+    # VMEM budget, and since the scratch grows monotonically in t the
+    # first overflow terminates the depth sweep (batches thus demote
+    # depth before resident rows).
+    deep_sub = max(sub_rows, r)
+    t = 2
+    while t <= max(1, min(max(max_fuse, DEEP_MAX_FUSE), n)):
+        scratch = deep_scratch_rows(deep_sub, r, t) * row_bytes
+        if scratch > chip_per_inst.onchip_bytes * 0.9:
+            break
+        rows = plan_resident_planes(shape, db, problem.spec,
+                                    chip=chip_per_inst, sub_rows=deep_sub,
+                                    fuse_steps=t, schedule="deep")
+        cached_bytes = rows * row_bytes
+        gm = gm_bytes_deep(n, domain_bytes, cached_bytes, fuse_steps=t)
+        t_gm = B * gm / chip.hbm_bw
+        t_sm = B * sm_bytes_accessed(n, cached_bytes) / chip.onchip_bw
+        bound = "main_memory" if t_gm >= t_sm else "onchip_memory"
+        cands.append(Plan(
+            tier="resident", schedule="deep", fuse_steps=t,
+            cached_rows=rows, sub_rows=deep_sub,
             cache=(CacheDecision("domain_rows", B * cached_bytes,
                                  B * domain_bytes),),
             predicted_s=max(t_gm, t_sm) + DISPATCH_OVERHEAD_S,

@@ -42,6 +42,22 @@ def stencil_perks(x, *, spec: StencilSpec, steps: int, cached_rows: int,
                               sub_rows=sub_rows, fuse_steps=fuse_steps)
 
 
+@functools.partial(
+    jax.jit,
+    static_argnames=("spec", "steps", "cached_rows", "sub_rows",
+                     "fuse_steps"))
+def stencil_perks_deep(x, *, spec: StencilSpec, steps: int, cached_rows: int,
+                       sub_rows: int = 128, fuse_steps: int = 1):
+    """Deep temporal blocking (wavefront schedule, DESIGN.md §12):
+    ``fuse_steps=t`` time steps per HBM streaming pass with every uncached
+    row read+written exactly once per pass — no ``radius*t`` redundant
+    recompute, so t is no longer capped at ~2–4. Same in-place aliasing
+    contract as ``stencil_perks``."""
+    return _s2d.stencil_perks_deep(x, spec, steps=steps,
+                                   cached_rows=cached_rows,
+                                   sub_rows=sub_rows, fuse_steps=fuse_steps)
+
+
 @functools.partial(jax.jit, static_argnames=("spec", "sub_rows"))
 def stencil_baseline_step(x, *, spec: StencilSpec, sub_rows: int = 128):
     """One non-persistent stencil step (host-loop baseline kernel)."""

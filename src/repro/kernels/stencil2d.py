@@ -32,6 +32,16 @@ axis, ``StencilSpec.apply_rows`` handles the rest):
     (identical streaming inner loop, steps=1, nothing resident). Used by
     the host-loop baseline so kernel quality is held constant and only the
     execution model differs — the paper's controlled comparison.
+
+``stencil_perks_deep``
+    Deep temporal blocking (arXiv:2306.03336, DESIGN.md §12): a wavefront
+    schedule over the streamed region in which every HBM pass advances
+    ``t ≫ 4`` time steps with NO redundant recompute — each uncached row
+    is read and written exactly once per pass, and inter-block halos are
+    carried through per-level VMEM edge stashes instead of the ``r*t``-
+    wide re-read windows of ``stencil_perks``. The level-0 buffer is
+    triple-buffered so the DMA of block i+1 overlaps the compute on
+    block i.
 """
 from __future__ import annotations
 
@@ -237,6 +247,280 @@ def stencil_perks(
         out_specs=pl.BlockSpec(memory_space=pl.ANY),
         scratch_shapes=_scratch_shapes(x.shape, x.dtype, spec, cached_rows,
                                        sub_rows, t),
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )(x)
+
+
+def _deep_kernel(
+    x_ref,         # input ref (aliased to io_ref; unused — all I/O via io_ref)
+    io_ref,        # full domain, HBM (ANY), aliased input/output
+    *scratch,      # packed VMEM buffers + DMA semaphores (_deep_scratch_shapes)
+    spec: StencilSpec,
+    steps: int,
+    cached_rows: int,
+    sub_rows: int,
+    fuse_steps: int,
+):
+    """Wavefront deep-temporal-blocking schedule (DESIGN.md §12).
+
+    The streamed region [R, H) is split into blocks of ``sub_rows`` rows.
+    One pass runs outer iterations j = 0..m+t-1; at iteration j, stage k
+    (k = 1..t, in increasing order) advances block ``i = j-k`` from time
+    level k-1 to level k, so block i finishes all t levels at iteration
+    i+t and is written back exactly once. Level-(k-1) inputs for stage k:
+
+      * block i itself — the level-(k-1) ping-pong slot written last
+        iteration by stage k-1 (parity (j-1)%2);
+      * the top ``r`` rows of block i+1 — written THIS iteration by stage
+        k-1 (parity j%2), which is why stages run in increasing k;
+      * the bottom ``r`` rows of block i-1 — stashed by stage k-1 this
+        iteration right before it overwrote that slot (st[k-1]), or read
+        from the still-intact slot when stage k-1 was inactive (drain).
+
+    Level 0 is TRIPLE buffered: at iteration j the DMA of block j+1 runs
+    while stage 1 computes on block j-1 and reads block j's top rows —
+    the compute-on-tile-i-while-DMA-ing-tile-i+1 overlap. The resident
+    region [0, R) advances one level per iteration (j -> j+1 at the end
+    of iteration j < t), coupling to block 0 through two r-row stashes,
+    so it needs no per-pass HBM traffic at all — unlike the shallow
+    kernel's step-k edge re-read. Per pass the uncached region moves
+    2*D_uncached bytes regardless of t (``gm_bytes_deep``).
+
+    All indices are static Python ints: the wavefront is fully unrolled
+    inside one pass; passes repeat under ``lax.fori_loop``.
+    """
+    H = io_ref.shape[0]
+    r = spec.radius
+    R = cached_rows
+    t = fuse_steps
+    S = min(sub_rows, max(H - R, 1))
+    starts = list(range(R, H, S))
+    ends = [min(s + S, H) for s in starts]
+    m = len(starts)
+
+    # unpack the packed scratch list (layout: _deep_scratch_shapes)
+    dom = scratch[0]
+    b0 = scratch[1:4]                        # level-0 triple buffer
+    lv_flat = scratch[4:4 + 2 * (t - 1)]     # levels 1..t-1, ping-pong pairs
+    st = scratch[2 * t + 2:3 * t + 2]        # per-level r-row edge stashes
+    dst = scratch[3 * t + 2]                 # resident region's bottom-r stash
+    wb = scratch[3 * t + 3:3 * t + 5]        # write-back double buffer
+    si = scratch[3 * t + 5:3 * t + 8]        # inbound DMA semaphores (per slot)
+    so = scratch[3 * t + 8:3 * t + 10]       # outbound DMA semaphores
+
+    def lvbuf(k, p):
+        return lv_flat[2 * (k - 1) + p]
+
+    def _copy(src, dst_ref, sem):
+        cp = pltpu.make_async_copy(src, dst_ref, sem)
+        cp.start()
+        cp.wait()
+
+    def _advance_block(w, a0, s, e):
+        """One time step applied to window ``w`` (covering rows [a0, ...)),
+        returning the new values of rows [s, e); rows inside the global
+        Dirichlet border are copied through unchanged. Static bounds."""
+        u0, u1 = max(s, r), min(e, H - r)
+        if u1 <= u0:
+            return w[s - a0:e - a0]
+        parts = []
+        if u0 > s:
+            parts.append(w[s - a0:u0 - a0])
+        parts.append(spec.apply_rows(w, u0 - a0, u1 - a0))
+        if u1 < e:
+            parts.append(w[u1 - a0:e - a0])
+        return parts[0] if len(parts) == 1 else jnp.concatenate(parts, 0)
+
+    # Prologue: load the resident region into VMEM once.
+    if R > 0:
+        _copy(io_ref.at[pl.ds(0, R)], dom, si[0])
+
+    def make_wave(ct):
+        """One wavefront pass advancing ``ct`` time steps."""
+
+        def wave(_):
+            if m == 0:  # fully resident: pure VMEM sweep, no streaming
+                for _k in range(ct):
+                    dom[...] = _advance_block(dom[...], 0, 0, H)
+                return ()
+
+            in_pending = {}
+            out_pending = {}
+
+            def start_in(i):
+                bn = ends[i] - starts[i]
+                cp = pltpu.make_async_copy(
+                    io_ref.at[pl.ds(starts[i], bn)],
+                    b0[i % 3].at[pl.ds(0, bn)], si[i % 3])
+                cp.start()
+                in_pending[i % 3] = cp
+
+            start_in(0)  # warm-up: block 0 in flight before iteration 0
+            for j in range(m + ct):
+                dma_next = j + 1 < m
+                # The DMA below overwrites slot (j+1)%3, which still holds
+                # block j-2 — stash its bottom r rows if stage 1 reads
+                # them this iteration (its block-(j-1) above-halo).
+                if dma_next and 1 <= j - 1 < m:
+                    st[0][...] = b0[(j + 1) % 3][pl.ds(S - r, r)]
+                if dma_next:
+                    start_in(j + 1)
+                if j < m:
+                    in_pending.pop(j % 3).wait()
+
+                for k in range(1, ct + 1):
+                    i = j - k
+                    if not (0 <= i < m):
+                        continue
+                    s, e = starts[i], ends[i]
+                    bn = e - s
+                    a0 = max(s - r, 0)
+                    n_below = min(e + r, H) - e
+                    if k == 1:
+                        own = b0[(j - 1) % 3]
+                        below = b0[j % 3]
+                        prev_active = dma_next
+                        prev_buf = b0[(j + 1) % 3]
+                    else:
+                        own = lvbuf(k - 1, (j - 1) % 2)
+                        below = lvbuf(k - 1, j % 2)
+                        prev_active = 0 <= j - (k - 1) < m
+                        prev_buf = lvbuf(k - 1, j % 2)
+                    parts = []
+                    if s > a0:
+                        if i == 0:
+                            parts.append(dst[...])       # dom at level k-1
+                        elif prev_active:
+                            parts.append(st[k - 1][...])  # stashed this iter
+                        else:            # drain: slot never overwritten
+                            parts.append(prev_buf[pl.ds(S - r, r)])
+                    parts.append(own[pl.ds(0, bn)])
+                    if n_below:
+                        parts.append(below[pl.ds(0, n_below)])
+                    w = (parts[0] if len(parts) == 1
+                         else jnp.concatenate(parts, 0))
+                    out = _advance_block(w, a0, s, e)
+                    if k == ct:
+                        # final level: double-buffered write-back
+                        old = out_pending.pop(j % 2, None)
+                        if old is not None:
+                            old.wait()
+                        wb[j % 2][pl.ds(0, bn)] = out
+                        cp = pltpu.make_async_copy(
+                            wb[j % 2].at[pl.ds(0, bn)],
+                            io_ref.at[pl.ds(s, bn)], so[j % 2])
+                        cp.start()
+                        out_pending[j % 2] = cp
+                    else:
+                        # stash the slot's old bottom rows (block i-2 at
+                        # level k) if stage k+1 reads them this iteration
+                        if 1 <= j - k - 1 < m:
+                            st[k][...] = lvbuf(k, j % 2)[pl.ds(S - r, r)]
+                        lvbuf(k, j % 2)[pl.ds(0, bn)] = out
+
+                # Resident region: advance level j -> j+1 at the end of
+                # iteration j, fed by block 0's top rows at level j
+                # (computed this iteration); stash its own bottom rows
+                # first — stage j+1 consumes them next iteration.
+                if R > 0 and j < ct:
+                    dst[...] = dom[pl.ds(R - r, r)]
+                    nb = min(r, H - R)
+                    top = b0[0] if j == 0 else lvbuf(j, j % 2)
+                    w = jnp.concatenate([dom[...], top[pl.ds(0, nb)]], 0)
+                    dom[...] = _advance_block(w, 0, 0, R)
+
+            for cp in out_pending.values():
+                cp.wait()
+            return ()
+
+        return wave
+
+    full, rem = divmod(steps, t)
+    if full:
+        jax.lax.fori_loop(0, full, lambda i, c: make_wave(t)(c), ())
+    if rem:
+        make_wave(rem)(())
+
+    # Epilogue: the resident region's final state goes back to HBM once.
+    if R > 0:
+        _copy(dom, io_ref.at[pl.ds(0, R)], si[0])
+
+
+def _deep_scratch_shapes(shape, dtype, spec, cached_rows, sub_rows,
+                         fuse_steps):
+    r = spec.radius
+    t = fuse_steps
+    rest = tuple(shape[1:])
+    S = min(sub_rows, max(shape[0] - cached_rows, 1))
+    one = lambda n: (max(n, 1),) + rest  # zero-size scratch is not allowed
+    return (
+        [pltpu.VMEM(one(cached_rows), dtype)]            # dom
+        + [pltpu.VMEM(one(S), dtype)] * 3                # level-0 triple buf
+        + [pltpu.VMEM(one(S), dtype)] * (2 * (t - 1))    # level ping-pongs
+        + [pltpu.VMEM(one(r), dtype)] * t                # per-level stashes
+        + [pltpu.VMEM(one(r), dtype)]                    # dom stash
+        + [pltpu.VMEM(one(S), dtype)] * 2                # write-back bufs
+        + [pltpu.SemaphoreType.DMA] * 5                  # 3 in + 2 out
+    )
+
+
+def stencil_perks_deep(
+    x: jax.Array,
+    spec: StencilSpec,
+    *,
+    steps: int,
+    cached_rows: int,
+    sub_rows: int = 128,
+    fuse_steps: int = 1,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Deep temporal blocking: ``fuse_steps=t`` time steps per HBM pass
+    with NO redundant recompute (arXiv:2306.03336; DESIGN.md §12).
+
+    Where ``stencil_perks`` widens every subtile read window to an
+    ``r*t`` halo of step-k values and redundantly recomputes the inner
+    steps (cost linear in t, useful depth ~2–4), the wavefront schedule
+    keeps ``t`` time levels of block edges alive in VMEM ping-pong
+    buffers so each streamed row is read once and written once per pass
+    at ANY depth:
+
+        A_gm = ceil(N/t) * 2*D_uncached + 2*D_cached
+
+    (``core.cache_policy.gm_bytes_deep``) — monotonically non-increasing
+    in t, vs. the shallow kernel's per-pass ``2*r*t`` overlap re-read.
+    The price is scratch: ``deep_scratch_rows`` grows linearly in t, so
+    depth trades against resident rows under the planner's VMEM budget.
+
+    Validity needs only ``sub_rows >= radius`` (one level's halo), NOT
+    the shallow ``radius*fuse_steps`` bound — that is what unlocks
+    t >> 4. Bit-equivalence vs the loop tiers holds to the same <= 2-ulp
+    reassociation bound as the shallow kernel (tests/test_deep_blocking).
+    """
+    H = x.shape[0]
+    r = spec.radius
+    t = max(1, min(fuse_steps, steps)) if steps else 1
+    assert fuse_steps >= 1, "fuse_steps must be >= 1"
+    assert cached_rows in (0, H) or cached_rows >= r, (
+        "partial caching needs at least `radius` resident rows")
+    assert cached_rows <= H
+    assert sub_rows >= r, (
+        "deep schedule needs one level's halo per block "
+        f"(sub_rows >= radius = {r}, got {sub_rows})")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    kernel = functools.partial(
+        _deep_kernel, spec=spec, steps=steps,
+        cached_rows=cached_rows, sub_rows=sub_rows, fuse_steps=t,
+    )
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=pl.BlockSpec(memory_space=pl.ANY),
+        scratch_shapes=_deep_scratch_shapes(x.shape, x.dtype, spec,
+                                            cached_rows, sub_rows, t),
         input_output_aliases={0: 0},
         interpret=interpret,
     )(x)

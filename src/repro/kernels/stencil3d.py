@@ -14,14 +14,21 @@ from __future__ import annotations
 
 
 
+from repro.core.cache_policy import deep_scratch_rows
 from repro.core.hardware import Chip, TPU_V5E
 from repro.kernels.common import StencilSpec
 # rank-generic kernels, re-exported so they stay importable from the 3D module
-from repro.kernels.stencil2d import stencil_perks, stencil_resident, stencil_baseline_step  # noqa: F401
+from repro.kernels.stencil2d import (  # noqa: F401
+    stencil_baseline_step,
+    stencil_perks,
+    stencil_perks_deep,
+    stencil_resident,
+)
 
 
 __all__ = [
     "stencil_perks",
+    "stencil_perks_deep",
     "stencil_resident",
     "stencil_baseline_step",
     "plan_resident_planes",
@@ -37,6 +44,7 @@ def plan_resident_planes(
     sub_rows: int = 8,
     vmem_fraction: float = 0.9,
     fuse_steps: int = 1,
+    schedule: str = "shallow",
 ) -> int:
     """How many leading planes (rows in 2D) can stay VMEM-resident.
 
@@ -45,23 +53,36 @@ def plan_resident_planes(
     of VMEM holds resident planes. Returns a plane count in [0, shape[0]],
     rounded down to a multiple of 8 (f32 sublane tiling).
 
-    Temporal blocking widens the working set: ``fuse_steps=t`` grows the
-    streaming window and the edge/carry stashes from ``radius`` to
-    ``radius*t`` planes (DESIGN.md §4) — deeper fusion trades resident
-    planes for fewer HBM passes, which is the fuse_steps-vs-VMEM-budget
-    tradeoff the generalized Eq. 5 prices.
+    Temporal blocking widens the working set. ``schedule="shallow"``
+    (``stencil_perks``): ``fuse_steps=t`` grows the streaming window and
+    the edge/carry stashes from ``radius`` to ``radius*t`` planes
+    (DESIGN.md §4). ``schedule="deep"`` (``stencil_perks_deep``): the
+    wavefront scheme instead keeps (2t+3) block buffers plus (t+1) edge
+    stashes alive (``core.cache_policy.deep_scratch_rows``, DESIGN.md
+    §12) — the streaming window no longer widens with t, so the working
+    set grows with the *buffer count*, not the halo width. Either way,
+    deeper fusion trades resident planes for fewer HBM passes.
     """
+    if schedule not in ("shallow", "deep"):
+        raise ValueError(
+            f"schedule must be 'shallow' or 'deep', got {schedule!r}")
     plane_elems = 1
     for d in shape[1:]:
         plane_elems *= d
     plane_bytes = plane_elems * dtype_bytes
-    r = spec.radius * fuse_steps
-    working = (2 * (sub_rows + 2 * r) + 2 * r) * plane_bytes  # sub+wbuf+edge+carry
+    if schedule == "deep":
+        working = deep_scratch_rows(sub_rows, spec.radius,
+                                    fuse_steps) * plane_bytes
+        min_planes = spec.radius           # deep needs only one level's halo
+    else:
+        r = spec.radius * fuse_steps
+        working = (2 * (sub_rows + 2 * r) + 2 * r) * plane_bytes  # sub+wbuf+edge+carry
+        min_planes = r
     budget = chip.onchip_bytes * vmem_fraction - working
     planes = int(budget // plane_bytes)
     planes = max(0, min(planes, shape[0]))
     if 0 < planes < shape[0]:
         planes = max((planes // 8) * 8, min(8, shape[0]))
-        if planes < r:
+        if planes < min_planes:
             planes = 0
     return planes

@@ -55,6 +55,11 @@ def plan_signature(plan) -> str:
     changes the executed program, none of the planner metadata
     (``predicted_s`` et al. are values, not identity)."""
     parts = [plan.tier, f"t{plan.fuse_steps}", f"b{plan.batch}"]
+    if plan.schedule != "shallow":
+        # the resident-tier blocking schedule changes the executed kernel
+        # (DESIGN.md §12); "shallow" stays implicit so pre-deep ledgers
+        # keep matching their plans
+        parts.append(plan.schedule)
     if plan.sync_every is not None:
         parts.append(f"sync{plan.sync_every}")
     if plan.cached_rows is not None:

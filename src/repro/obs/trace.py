@@ -10,6 +10,7 @@ the taxonomy the executor and services agree on (``CATEGORIES``):
     compile     runner construction (a trace/compile boundary)
     dispatch    one execute()/runner invocation
     chunk       one fused step chunk between host syncs
+    dma         a projected DMA transfer group (resident-tier streaming)
     barrier     a host-sync barrier (scheduler runs here)
     collective  a collective round projected/executed per barrier
     lane        lane admission / retirement / harvest (continuous batching)
@@ -40,7 +41,7 @@ from typing import Any, Callable
 
 #: The event taxonomy (DESIGN.md §11). Free-form categories are allowed
 #: but everything the repo emits uses these.
-CATEGORIES = ("plan", "compile", "dispatch", "chunk", "barrier",
+CATEGORIES = ("plan", "compile", "dispatch", "chunk", "dma", "barrier",
               "collective", "lane", "cache", "measure")
 
 

@@ -65,10 +65,13 @@ def run_device_loop(x, spec: StencilSpec, steps: int):
 
 def run_resident(x, spec: StencilSpec, steps: int, *,
                  chip: Chip = TPU_V5E, cached_rows: Optional[int] = None,
-                 sub_rows: int = 128, fuse_steps: int = 1):
+                 sub_rows: int = 128, fuse_steps: int = 1,
+                 schedule: str = "shallow"):
     """Full PERKS: Pallas kernel, VMEM-resident rows chosen by the cache
     policy (interior-first; halo never cached). ``fuse_steps=t`` advances
-    t steps per HBM streaming pass (temporal blocking, DESIGN.md §4).
+    t steps per HBM streaming pass (temporal blocking, DESIGN.md §4);
+    ``schedule="deep"`` runs them on the wavefront scratchpad schedule
+    (DESIGN.md §12) instead of the r*t redundant-recompute windows.
 
     Deprecated shim: use ``execute`` with a resident Plan (or let
     ``repro.exec.plan`` pick ``cached_rows`` for you).
@@ -79,11 +82,11 @@ def run_resident(x, spec: StencilSpec, steps: int, *,
     if cached_rows is None:
         cached_rows = plan_resident_planes(
             x.shape, x.dtype.itemsize, spec, chip=chip, sub_rows=sub_rows,
-            fuse_steps=fuse_steps)
+            fuse_steps=fuse_steps, schedule=schedule)
     return execute(
         StencilProblem(x, spec, steps),
         Plan(tier="resident", cached_rows=cached_rows, sub_rows=sub_rows,
-             fuse_steps=fuse_steps, chip=chip.name))
+             fuse_steps=fuse_steps, schedule=schedule, chip=chip.name))
 
 
 def plan_for(x_shape, dtype_bytes, spec: StencilSpec, *,

@@ -134,14 +134,23 @@ def test_planner_fuse_cap_monotonicity():
 
 
 def test_planner_chip_capacity_sensitivity():
-    """A chip with less on-chip memory can never cache more (same problem)."""
+    """A chip with less on-chip memory can never cache more (same problem).
+
+    Asserted over the *candidate set* (its max cached bytes), not the
+    ranked winner: since the deep schedule axis (DESIGN.md §12) the
+    winner may deliberately trade resident rows for wavefront scratch —
+    a bigger-VMEM chip can pick a deeper, less-cached plan because it is
+    faster, so only the capacity frontier is monotone."""
     spec = get_spec("2d5pt")
     problem = StencilProblem(
         jax.ShapeDtypeStruct((4096, 2048), jnp.float32), spec, 100)
     by_cap = sorted(("a100", "v100", "tpu_v5e"),
                     key=lambda n: CHIPS[n].onchip_bytes)
-    cached = [plan(problem, chip=n).cached_bytes for n in by_cap]
+    cached = [max(c.cached_bytes for c in plan_candidates(problem, chip=n)
+                  if c.tier == "resident")
+              for n in by_cap]
     assert cached == sorted(cached)
+    assert cached[-1] > 0
 
 
 def test_plan_subsumes_legacy_stencil_planner():
