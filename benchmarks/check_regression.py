@@ -30,7 +30,15 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 import jax
 import jax.numpy as jnp
 
-from repro.exec import BiCGStabProblem, CGProblem, GMRESProblem, StencilProblem, plan
+from repro.exec import (
+    BiCGStabProblem,
+    CGProblem,
+    DecodeAttentionProblem,
+    GMRESProblem,
+    SSMScanProblem,
+    StencilProblem,
+    plan,
+)
 from repro.kernels.common import get_spec
 
 _HERE = os.path.dirname(os.path.abspath(__file__))
@@ -55,6 +63,10 @@ CGS = (
 # entry each, projected on abstract operands like the CG rows
 BICGSTAB = ((65_536, 8, 100),)
 GMRES = ((65_536, 8, 16, 6),)  # (n, k, m, cycles)
+# ML problems (DESIGN.md §13): decode projected on abstract cache/params
+# specs per smoke arch, SSD scan on abstract streams
+DECODES = (("qwen2-0.5b", 4, 64, 31), ("mamba2-780m", 4, 64, 31))
+SSMS = ((4096, 8, 16, 32, 128),)  # (T, H, P, N, chunk)
 BATCHES = (1, 8)
 
 
@@ -99,6 +111,34 @@ def current_projections() -> dict[str, float]:
         for b in BATCHES:
             chosen = plan(problem, batch=b)
             out[f"gmres_n{n}_k{k}_m{m}_c{cycles}_b{b}"] = chosen.predicted_s
+    for arch, rows, ctx, steps in DECODES:
+        from repro.configs.registry import get_smoke_config
+        from repro.models.lm import Model
+
+        model = Model(get_smoke_config(arch))
+        problem = DecodeAttentionProblem(
+            model=model,
+            params=jax.eval_shape(model.init, jax.random.key(0)),
+            cache=model.cache_spec(rows, ctx),
+            first_tokens=jax.ShapeDtypeStruct((rows,), jnp.int32),
+            n_steps=steps,
+        )
+        for b in BATCHES:
+            chosen = plan(problem, batch=b)
+            out[f"decode_{arch}_r{rows}_c{ctx}_n{steps}_b{b}"] = chosen.predicted_s
+    for t, h, p, n, chunk in SSMS:
+        problem = SSMScanProblem(
+            x=jax.ShapeDtypeStruct((t, h, p), jnp.float32),
+            dt=jax.ShapeDtypeStruct((t, h), jnp.float32),
+            a=jax.ShapeDtypeStruct((h,), jnp.float32),
+            b=jax.ShapeDtypeStruct((t, n), jnp.float32),
+            c=jax.ShapeDtypeStruct((t, n), jnp.float32),
+            d=jax.ShapeDtypeStruct((h,), jnp.float32),
+            chunk=chunk,
+        )
+        for b in BATCHES:
+            chosen = plan(problem, batch=b)
+            out[f"ssm_t{t}_h{h}_p{p}_n{n}_ck{chunk}_b{b}"] = chosen.predicted_s
     return out
 
 

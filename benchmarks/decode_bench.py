@@ -3,9 +3,31 @@ instance of Fig. 3), measured wall-clock on the reduced configs.
 
 This is the paper's core claim transplanted to serving: the host loop pays
 a dispatch + cache round-trip per token; the persistent loop fuses N tokens
-per dispatch with a donated cache.
+per dispatch with a donated cache. Three row families:
+
+* ``decode_{arch}`` — the legacy comparison: ``Model.decode_loop`` called
+  directly vs the jitted per-token loop.
+* ``decode_exec_{arch}`` — the executor path the serving engine now uses
+  (``runtime/server.py``): the batch wrapped as a
+  :class:`repro.exec.DecodeAttentionProblem`, tier picked by ``plan()``,
+  run by ``execute()`` — tokens/sec next to the per-token baseline's.
+* ``ssm_exec_*`` — ``repro.exec.autotune`` over a
+  :class:`repro.exec.SSMScanProblem` (the Mamba2 SSD scan), reporting the
+  planner-predicted vs measured time per candidate tier, in the
+  ``exec_plan_*`` format.
+
+``--record PATH`` appends the measured entries to
+``benchmarks/BENCH_decode.json`` (the committed history; regeneration
+workflow in docs/BENCHMARKS.md).
 """
 from __future__ import annotations
+
+import json
+import os
+import sys
+
+# runnable directly (`python benchmarks/decode_bench.py --record ...`)
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 import jax
 import jax.numpy as jnp
@@ -20,40 +42,143 @@ B = 4
 PROMPT = 32
 
 
+def _decode_arch(arch: str) -> tuple[list[dict], float, float]:
+    """Bench one arch. Returns (record entries, legacy speedup, exec
+    speedup) — each speedup is per-token baseline time / variant time."""
+    from repro.exec import DecodeAttentionProblem, execute, plan
+
+    cfg = get_smoke_config(arch)
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    tokens = jax.random.randint(jax.random.key(1), (B, PROMPT), 0,
+                                cfg.vocab)
+    logits, cache0 = jax.jit(
+        lambda p, b: model.prefill(p, b, cache_seq=PROMPT + NEW)
+    )(params, {"tokens": tokens})
+    first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    step = jax.jit(model.decode_step)
+
+    def host_loop():
+        cache = cache0
+        tok = first
+        for _ in range(NEW):
+            logits, cache = step(params, cache, tok)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        return tok
+
+    def persistent():
+        c = jax.tree.map(lambda x: x.copy() if hasattr(x, 'copy') else x,
+                         cache0)
+        return model.decode_loop(params, c, first, NEW)[0]
+
+    # the serving engine's path: Problem -> plan (cached per batch_key
+    # in the engine; planned once here) -> execute
+    prob = DecodeAttentionProblem(model=model, params=params, cache=cache0,
+                                  first_tokens=first, n_steps=NEW)
+    eplan = plan(prob)
+
+    def exec_decode():
+        return execute(prob, eplan)[0]
+
+    t_host, _ = time_fn(host_loop, warmup=1, iters=3)
+    t_perks, _ = time_fn(persistent, warmup=1, iters=3)
+    t_exec, _ = time_fn(exec_decode, warmup=1, iters=3)
+    sp = t_host / t_perks
+    sp_exec = t_host / t_exec
+    tok_s_exec = B * NEW / t_exec
+    tok_s_host = B * NEW / t_host
+    row(f"decode_{arch}", t_perks / NEW * 1e6,
+        f"host_us_per_tok={t_host / NEW * 1e6:.1f};speedup={sp:.2f}x")
+    row(f"decode_exec_{arch}", t_exec / NEW * 1e6,
+        f"tok_per_s={tok_s_exec:.1f};baseline_tok_per_s={tok_s_host:.1f};"
+        f"speedup={sp_exec:.2f}x;tier={eplan.tier}")
+    entry = {
+        "problem": f"decode_{arch}", "jax": jax.__version__,
+        "batch": B, "new_tokens": NEW, "tier": eplan.tier,
+        "exec_us_per_tok": round(t_exec / NEW * 1e6, 2),
+        "baseline_us_per_tok": round(t_host / NEW * 1e6, 2),
+        "exec_tok_per_s": round(tok_s_exec, 1),
+        "baseline_tok_per_s": round(tok_s_host, 1),
+        "speedup": round(sp_exec, 3),
+    }
+    return [entry], sp, sp_exec
+
+
+def _ssm_exec() -> list[dict]:
+    """Autotune the SSD-scan Problem; ``ssm_exec_*`` rows in the
+    ``exec_plan_*`` per-candidate format."""
+    from repro import obs
+    from repro.exec import SSMScanProblem, autotune
+
+    key = jax.random.key(7)
+    ks = jax.random.split(key, 6)
+    T, H, P, N = 256, 4, 8, 16
+    prob = SSMScanProblem(
+        x=jax.random.normal(ks[0], (T, H, P), jnp.float32),
+        dt=jax.nn.softplus(jax.random.normal(ks[1], (T, H))) * 0.1,
+        a=-jnp.exp(jax.random.normal(ks[2], (H,))),
+        b=jax.random.normal(ks[3], (T, N)) * 0.3,
+        c=jax.random.normal(ks[4], (T, N)) * 0.3,
+        d=jax.random.normal(ks[5], (H,)),
+        chunk=64)
+    res = autotune(prob, top_k=3, warmup=1, iters=3)
+    n = prob.n_steps
+    for rank, tr in enumerate(res.table):
+        p = tr.plan
+        pred_us = (p.predicted_s or 0.0) / n * 1e6
+        row(f"ssm_exec_{p.tier}", tr.measured_s / n * 1e6,
+            f"predicted_us={pred_us:.3f};planner_rank={rank};"
+            f"chosen={int(p == res.best)};chunk={prob.chunk_eff}")
+    return [{
+        "problem": f"ssm_t{T}_h{H}_p{P}_n{N}", "jax": jax.__version__,
+        "best": obs.plan_signature(res.best),
+        "candidates": [{
+            "plan": obs.plan_signature(tr.plan),
+            "tier": tr.plan.tier,
+            "predicted_s": tr.predicted_s,
+            "measured_s": round(tr.measured_s, 6),
+        } for tr in res.table],
+    }]
+
+
 def run(archs=("qwen2-0.5b", "h2o-danube-1.8b", "mamba2-780m",
-               "zamba2-1.2b")):
+               "zamba2-1.2b"), record_path: str | None = None):
     speedups = []
+    exec_speedups = []
+    entries = []
     for arch in archs:
-        cfg = get_smoke_config(arch)
-        model = Model(cfg)
-        params = model.init(jax.random.key(0))
-        tokens = jax.random.randint(jax.random.key(1), (B, PROMPT), 0,
-                                    cfg.vocab)
-        _, cache0 = jax.jit(
-            lambda p, b: model.prefill(p, b, cache_seq=PROMPT + NEW)
-        )(params, {"tokens": tokens})
-        first = jnp.zeros((B,), jnp.int32)
-        step = jax.jit(model.decode_step)
-
-        def host_loop():
-            cache = cache0
-            tok = first
-            for _ in range(NEW):
-                logits, cache = step(params, cache, tok)
-                tok = jnp.argmax(logits, -1).astype(jnp.int32)
-            return tok
-
-        def persistent():
-            c = jax.tree.map(lambda x: x.copy() if hasattr(x, 'copy') else x,
-                             cache0)
-            return model.decode_loop(params, c, first, NEW)[0]
-
-        t_host, _ = time_fn(host_loop, warmup=1, iters=3)
-        t_perks, _ = time_fn(persistent, warmup=1, iters=3)
-        sp = t_host / t_perks
+        arch_entries, sp, sp_exec = _decode_arch(arch)
+        entries.extend(arch_entries)
         speedups.append(sp)
-        row(f"decode_{arch}", t_perks / NEW * 1e6,
-            f"host_us_per_tok={t_host / NEW * 1e6:.1f};speedup={sp:.2f}x")
+        exec_speedups.append(sp_exec)
     gm = float(np.exp(np.mean(np.log(speedups))))
+    gm_exec = float(np.exp(np.mean(np.log(exec_speedups))))
     row("decode_geomean", 0.0, f"speedup={gm:.2f}x")
+    row("decode_exec_geomean", 0.0, f"speedup={gm_exec:.2f}x")
+    entries.extend(_ssm_exec())
+
+    if record_path:
+        try:
+            history = json.load(open(record_path))
+        except (FileNotFoundError, json.JSONDecodeError):
+            history = []
+        history.append({"archs": list(archs), "entries": entries})
+        with open(record_path, "w") as f:
+            json.dump(history, f, indent=2)
+            f.write("\n")
     return gm
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--record", default=None,
+                    help="append the measured entries to this JSON history "
+                         "(benchmarks/BENCH_decode.json)")
+    ap.add_argument("--full", action="store_true",
+                    help="bench all four archs (default: the two quick ones)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    archs = (("qwen2-0.5b", "h2o-danube-1.8b", "mamba2-780m", "zamba2-1.2b")
+             if args.full else ("qwen2-0.5b", "mamba2-780m"))
+    run(archs=archs, record_path=args.record)

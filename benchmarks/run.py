@@ -28,7 +28,11 @@ Prints ``name,us_per_call,derived`` CSV rows:
                     static drain() path — steady-state per-instance
                     throughput + p50/p99 latency under a Poisson arrival
                     trace (DESIGN.md §9)
-  decode_*          beyond-paper: persistent LM decode vs host loop
+  decode_*          beyond-paper: persistent LM decode vs host loop;
+                    decode_exec_* serves the same decode through the
+                    executor (DecodeAttentionProblem) and ssm_exec_*
+                    autotunes the SSD scan as an SSMScanProblem
+                    (DESIGN.md §13)
   train_fused_*     beyond-paper: K optimizer steps per dispatch
   roofline_*        §Roofline cells from the dry-run artifacts (if present)
 

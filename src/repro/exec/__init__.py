@@ -25,6 +25,12 @@ One solver-agnostic pipeline behind every iterative workload:
   GMRES(m) and s-step CG as Problem adapters, with mixed precision as a
   Plan dimension (``precision.py``): every tier, the batched dispatch and
   the async service serve them with zero solver-specific code.
+* The ML workloads (``ml.py``, DESIGN.md §13) —
+  :class:`DecodeAttentionProblem` (token-by-token LM decode; KV cache as
+  the cacheable operand, EOS as the batchable convergence contract) and
+  :class:`SSMScanProblem` (the Mamba2 SSD scan; chunk index as the time
+  axis, state ``h`` VMEM-resident on the resident tier), so the serving
+  engine (``runtime/server.py``) decodes through ``plan()``/``execute()``.
 
 The legacy ``solvers/stencil.py`` and ``solvers/cg.py`` surfaces are
 thin deprecated shims over this package.
@@ -49,6 +55,7 @@ from repro.exec.krylov import (
     cg_sstep_distributed,
     cg_sstep_run,
 )
+from repro.exec.ml import DecodeAttentionProblem, SSMScanProblem
 from repro.exec.plan import TIERS, CacheDecision, Plan
 from repro.exec.planner import plan, plan_candidates
 from repro.exec.precision import (
@@ -65,11 +72,13 @@ __all__ = [
     "BiCGStabProblem",
     "CGProblem",
     "CacheDecision",
+    "DecodeAttentionProblem",
     "GMRESProblem",
     "HaloSpec",
     "PRECISIONS",
     "Plan",
     "Problem",
+    "SSMScanProblem",
     "StencilProblem",
     "TIERS",
     "TimingRow",

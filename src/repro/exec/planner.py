@@ -327,6 +327,79 @@ def _cg_candidates(problem, chip: Chip, mesh, *, shard_axis: str,
 
 
 # -----------------------------------------------------------------------------
+# ML candidates (decode attention / SSM scan, DESIGN.md §13)
+# -----------------------------------------------------------------------------
+
+def _ml_candidates(problem, chip: Chip, *, sync_every: Optional[int],
+                   batch: int = 1, name: Optional[str] = None) -> list[Plan]:
+    """Candidates for the ML Problems (``repro.exec.ml``): decode
+    attention (KV-bytes-per-token traffic model) and the SSD scan
+    (VMEM-resident state ``h``).
+
+    The structure is shared: per-step streamed traffic from
+    ``cacheable_arrays`` prices the loop tiers; the resident tier elides
+    the ``carry_names`` arrays' round-trips (they live on-chip for the
+    whole time loop) and is gated on ``resident_scratch_bytes`` fitting
+    the per-instance VMEM budget (``per_instance_chip``, DESIGN.md §8).
+    """
+    from repro.exec.batch import per_instance_chip
+
+    # B-scaled working set: per-instance arrays (KV cache, SSM state,
+    # streams) scale bytes ×B; shared ones (params, decay coefficients)
+    # are read once for the whole batch.
+    arrays = [
+        a if not problem.array_scales_with_batch(a.name) or batch == 1
+        else dataclasses.replace(a, bytes=a.bytes * batch)
+        for a in problem.cacheable_arrays()
+    ]
+    n = problem.n_steps
+    carry_names = frozenset(getattr(problem, "carry_names", ()))
+    total = sum(a.bytes * (a.loads_per_step + a.stores_per_step)
+                for a in arrays)
+    carry = sum(a.bytes * (a.loads_per_step + a.stores_per_step)
+                for a in arrays if a.name in carry_names)
+    carry_bytes = sum(a.bytes for a in arrays if a.name in carry_names)
+
+    has_sync = problem.on_sync() is not None
+    if sync_every is None and has_sync and n > 1:
+        # decode declares a convergence check (EOS); DEVICE_LOOP honors
+        # it at barrier points. Short check cadence: retiring a finished
+        # lane early is worth far more per step than a CG residual check.
+        sync_every = min(8, max(1, n - 1))
+
+    common = dict(n_steps=n, problem=name or problem.name, chip=chip.name,
+                  sync_every=sync_every, batch=batch)
+    cands = [
+        Plan(tier="host_loop",
+             predicted_s=n * (total / chip.hbm_bw + DISPATCH_OVERHEAD_S),
+             predicted_bound="main_memory", **common),
+        Plan(tier="device_loop",
+             predicted_s=n * total / chip.hbm_bw + DISPATCH_OVERHEAD_S,
+             predicted_bound="main_memory", **common),
+    ]
+
+    # RESIDENT: the whole time loop in one fused program (decode_loop /
+    # the Pallas SSD kernel) with the carry pinned on-chip. Never offered
+    # when the problem declares a convergence check — the fused program
+    # has no host-sync points, so it cannot honor early retirement
+    # (executor.honors_on_sync); EOS decode lands on device_loop+sync.
+    chip_per_inst = per_instance_chip(chip, batch)
+    scratch = problem.resident_scratch_bytes()
+    if (not has_sync and n > 0
+            and scratch <= chip_per_inst.onchip_bytes * 0.9):
+        t_gm = n * max(0.0, total - carry) / chip.hbm_bw
+        t_sm = sm_bytes_accessed(n, carry_bytes) / chip.onchip_bw
+        bound = "main_memory" if t_gm >= t_sm else "onchip_memory"
+        cands.append(Plan(
+            tier="resident", fuse_steps=max(1, n),
+            cache=tuple(CacheDecision(a.name, a.bytes, a.bytes)
+                        for a in arrays if a.name in carry_names),
+            predicted_s=max(t_gm, t_sm) + DISPATCH_OVERHEAD_S,
+            predicted_bound=bound, **common))
+    return cands
+
+
+# -----------------------------------------------------------------------------
 # Public entry points
 # -----------------------------------------------------------------------------
 
@@ -376,6 +449,9 @@ def plan_candidates(problem: Problem, *, chip=TPU_V5E, mesh=None,
     elif template.kind in ("cg", "bicgstab", "gmres"):
         cands = _cg_candidates(template, chip, mesh, shard_axis=shard_axis,
                                sync_every=sync_every, batch=batch, name=name)
+    elif template.kind in ("decode", "ssm"):
+        cands = _ml_candidates(template, chip, sync_every=sync_every,
+                               batch=batch, name=name)
     else:
         raise NotImplementedError(
             f"no candidate generator for problem kind {template.kind!r}")

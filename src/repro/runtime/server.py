@@ -1,10 +1,14 @@
 """Batched serving runtime with PERKS persistent decode.
 
 Requests accumulate into a batch; the engine prefills them together and
-generates with ``Model.decode_loop`` — N tokens per dispatch with a donated
-cache (the paper's persistent-kernel execution applied to serving). The
-baseline mode dispatches ``decode_step`` per token for the benchmark
-comparison (benchmarks/decode_bench.py).
+generates through the PERKS executor: it wraps the batch as a
+:class:`repro.exec.DecodeAttentionProblem`, asks ``plan()`` for the tier
+(plans are cached per ``batch_key``, so steady-state serving re-plans
+only when shapes change), and runs ``execute()`` — the resident tier is
+``Model.decode_loop``, N tokens per dispatch with a donated cache (the
+paper's persistent-kernel execution applied to serving). The baseline
+mode dispatches ``decode_step`` per token for the benchmark comparison
+(benchmarks/decode_bench.py).
 
 :func:`start_metrics_server` exposes any :class:`repro.obs.MetricsRegistry`
 (the ambient one by default) over HTTP in the Prometheus text exposition
@@ -110,6 +114,9 @@ class Engine:
             lambda p, b, n: model.prefill(p, b, cache_seq=n),
             static_argnums=(2,))
         self._decode_step = jax.jit(model.decode_step, donate_argnums=(1,))
+        # plan cache: batch_key -> Plan. Serving the same shapes again
+        # reuses the planner's decision instead of re-ranking candidates.
+        self._plans: dict = {}
 
     def submit(self, req: Request):
         self._queue.append(req)
@@ -134,9 +141,24 @@ class Engine:
         t_prefill = time.time() - t0
 
         t0 = time.time()
+        tier = None
         if self.cfg.persistent:
-            toks, cache = self.model.decode_loop(
-                self.params, cache, first, new - 1)
+            # the executor path: wrap the batch as a Problem, let the
+            # planner pick the tier (resident = decode_loop; a VMEM-
+            # overflowing batch demotes to device_loop, still one fused
+            # program), execute. Token-identical to the legacy loop on
+            # every tier (tests/test_ml_problems.py).
+            from repro.exec import DecodeAttentionProblem, execute, plan
+            prob = DecodeAttentionProblem(
+                model=self.model, params=self.params, cache=cache,
+                first_tokens=first, n_steps=new - 1)
+            key = prob.batch_key()
+            eplan = self._plans.get(key)
+            if eplan is None:
+                eplan = plan(prob)
+                self._plans[key] = eplan
+            tier = eplan.tier
+            toks, cache = execute(prob, eplan)
             out = np.concatenate([np.asarray(first)[:, None],
                                   np.asarray(toks)], axis=1)
         else:
@@ -160,5 +182,6 @@ class Engine:
             "decode_s": t_decode,
             "tok_per_s": len(batch) * new / max(t_decode, 1e-9),
             "mode": mode,
+            "tier": tier,
         }
         return out, stats

@@ -85,3 +85,100 @@ def test_decode_attention(hq, hkv, s, block_s):
     got = ops.decode_attention(q, k, v, block_s=block_s)
     want = ref.decode_attention(q, k, v)
     np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+# -- ref-oracle edge cases (the contracts the ML adapters lean on) ------------
+
+def test_decode_attention_single_position():
+    # S=1: softmax over one logit is 1, so the output IS the value row
+    B, Hq, Hkv, D = 2, 4, 2, 16
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Hq, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, 1, Hkv, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, 1, Hkv, D), jnp.float32)
+    out = ref.decode_attention(q, k, v)
+    want = jnp.repeat(v[:, 0], Hq // Hkv, axis=1)   # each group reads its head
+    np.testing.assert_allclose(out, want, rtol=1e-6, atol=1e-6)
+
+
+def test_decode_attention_length_masks_tail():
+    # masking to length L must equal attending over the truncated cache
+    B, Hq, Hkv, S, D, L = 2, 8, 2, 64, 16, 23
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Hq, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), jnp.float32)
+    lengths = jnp.array([L, S], jnp.int32)
+    out = ref.decode_attention(q, k, v, length=lengths)
+    short = ref.decode_attention(q[:1], k[:1, :L], v[:1, :L])
+    full = ref.decode_attention(q[1:], k[1:], v[1:])
+    np.testing.assert_allclose(out[0], short[0], rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(out[1], full[0], rtol=1e-5, atol=1e-6)
+
+
+def test_decode_attention_gqa_grouping():
+    # hkv=1 broadcast-shares the single KV head; hq==hkv is plain MHA —
+    # both must reduce to the per-head dense softmax
+    B, S, D = 1, 32, 8
+    ks = jax.random.split(KEY, 3)
+    k1 = jax.random.normal(ks[1], (B, S, 1, D), jnp.float32)
+    v1 = jax.random.normal(ks[2], (B, S, 1, D), jnp.float32)
+    q = jax.random.normal(ks[0], (B, 4, D), jnp.float32)
+    shared = ref.decode_attention(q, k1, v1)
+    for h in range(4):
+        solo = ref.decode_attention(q[:, h:h + 1], k1, v1)
+        np.testing.assert_allclose(shared[:, h:h + 1], solo,
+                                   rtol=1e-5, atol=1e-6)
+    kq = jnp.repeat(k1, 4, axis=2)
+    vq = jnp.repeat(v1, 4, axis=2)
+    np.testing.assert_allclose(ref.decode_attention(q, kq, vq), shared,
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_decode_attention_bf16_tolerance():
+    # the documented-ulp contract: bf16 inputs track the f32 oracle to 5e-2
+    B, Hq, Hkv, S, D = 2, 4, 2, 64, 16
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Hq, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), jnp.float32)
+    f32 = ref.decode_attention(q, k, v)
+    b16 = ref.decode_attention(q.astype(jnp.bfloat16),
+                               k.astype(jnp.bfloat16),
+                               v.astype(jnp.bfloat16))
+    np.testing.assert_allclose(np.asarray(b16, np.float32),
+                               np.asarray(f32), rtol=5e-2, atol=5e-2)
+
+
+def test_ssm_scan_single_step_closed_form():
+    # T=1 against the recurrence written out by hand (h0 = 0):
+    #   h = dt * outer(b, x);  y = c @ h + d * x
+    H, P, N = 3, 4, 5
+    ks = jax.random.split(KEY, 6)
+    x = jax.random.normal(ks[0], (1, H, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (1, H)))
+    a = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    b = jax.random.normal(ks[3], (1, N), jnp.float32)
+    c = jax.random.normal(ks[4], (1, N), jnp.float32)
+    d = jax.random.normal(ks[5], (H,))
+    y = ref.ssm_scan(x, dt, a, b, c, d)
+    h = dt[0][:, None, None] * b[0][None, :, None] * x[0][:, None, :]
+    want = jnp.einsum("n,hnp->hp", c[0], h) + d[:, None] * x[0]
+    np.testing.assert_allclose(y[0], want, rtol=1e-5, atol=1e-6)
+
+
+def test_ssd_scan_single_chunk_covers_whole_t():
+    # chunk == T: one chunk, zero inter-chunk state hand-off exercised
+    B, T, H, P, N = 1, 32, 2, 4, 8
+    ks = jax.random.split(KEY, 6)
+    x = jax.random.normal(ks[0], (B, T, H, P), jnp.float32) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, H)))
+    a = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    b = jax.random.normal(ks[3], (B, T, N), jnp.float32) * 0.5
+    c = jax.random.normal(ks[4], (B, T, N), jnp.float32) * 0.5
+    d = jax.random.normal(ks[5], (H,))
+    got = ops.ssd_scan(x, dt, a, b, c, d, chunk=T)
+    want = jax.vmap(
+        lambda x_, dt_, b_, c_: ref.ssm_scan(x_, dt_, a, b_, c_, d)
+    )(x, dt, b, c)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,197 @@
+"""The ML workloads behind the executor (``repro.exec.ml``, DESIGN.md §13).
+
+Token/numeric equivalence of every tier against the legacy oracles, the
+EOS convergence contract, planner structure (resident gating, EOS
+exclusion, VMEM demotion), batch-key semantics, and abstract-probe
+planning.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.exec import (
+    DecodeAttentionProblem,
+    Plan,
+    SSMScanProblem,
+    execute,
+    plan,
+    plan_candidates,
+)
+
+KEY = jax.random.key(0)
+TIERS = ("host_loop", "device_loop", "resident")
+
+
+def _decode_problem(arch: str, b: int = 2, prompt: int = 6, n_steps: int = 7,
+                    **kw) -> DecodeAttentionProblem:
+    from repro.configs.registry import get_smoke_config
+    from repro.models.lm import Model
+
+    cfg = get_smoke_config(arch)
+    model = Model(cfg)
+    params = model.init(KEY)
+    prompts = jax.random.randint(jax.random.key(1), (b, prompt), 0, cfg.vocab)
+    logits, cache = model.prefill(params, {"tokens": prompts},
+                                  cache_seq=prompt + n_steps + 1)
+    first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return DecodeAttentionProblem(model=model, params=params, cache=cache,
+                                  first_tokens=first, n_steps=n_steps, **kw)
+
+
+def _ssm_problem(t: int = 64, h: int = 2, p: int = 4, n: int = 8,
+                 chunk: int = 16, dtype=jnp.float32) -> SSMScanProblem:
+    ks = jax.random.split(jax.random.key(2), 6)
+    return SSMScanProblem(
+        x=jax.random.normal(ks[0], (t, h, p), dtype),
+        dt=jax.nn.softplus(jax.random.normal(ks[1], (t, h), dtype)),
+        a=-jnp.exp(jax.random.normal(ks[2], (h,), jnp.float32)),
+        b=jax.random.normal(ks[3], (t, n), dtype),
+        c=jax.random.normal(ks[4], (t, n), dtype),
+        d=jax.random.normal(ks[5], (h,), jnp.float32),
+        chunk=chunk)
+
+
+# -- decode: every tier token-identical to the legacy serving loop -----------
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "mamba2-780m"])
+def test_decode_tiers_token_identical(arch):
+    prob = _decode_problem(arch)
+    ref_toks, ref_cache = prob.oracle()
+    for tier in TIERS:
+        toks, cache = execute(prob, Plan(tier=tier))
+        np.testing.assert_array_equal(
+            np.asarray(toks), np.asarray(ref_toks),
+            err_msg=f"{arch}/{tier} tokens diverge from the serving loop")
+        # the returned cache advanced by n_steps positions
+        assert int(jax.tree.leaves(cache)[0].shape[0]) == \
+            int(jax.tree.leaves(ref_cache)[0].shape[0])
+
+
+def test_decode_resident_is_decode_loop():
+    prob = _decode_problem("qwen2-0.5b", b=1, n_steps=5)
+    toks, _ = execute(prob, Plan(tier="resident"))
+    loop_toks, _ = prob.model.decode_loop(
+        prob.params, jax.tree.map(lambda a: a.copy(), prob.cache),
+        prob.first_tokens, prob.n_steps)
+    np.testing.assert_array_equal(np.asarray(toks), np.asarray(loop_toks))
+
+
+def test_decode_eos_convergence_contract():
+    base = _decode_problem("qwen2-0.5b", b=1, n_steps=8)
+    ref = np.asarray(base.oracle()[0])
+    eos = int(ref[0, -1])                 # its FIRST occurrence is the stop
+    k = int(np.argmax(ref[0] == eos))
+    prob = _decode_problem("qwen2-0.5b", b=1, n_steps=8, eos_id=eos)
+
+    conv = prob.convergence()
+    assert conv is not None
+    pred, params = conv
+    eos_state = (prob.cache, jnp.full_like(prob.first_tokens, eos),
+                 None, None)
+    other = (prob.cache, jnp.full_like(prob.first_tokens, eos + 1),
+             None, None)
+    assert bool(pred(eos_state, params))
+    assert not bool(pred(other, params))
+
+    # generated tokens up to and including the first EOS match the oracle
+    for tier in ("host_loop", "device_loop"):
+        toks, _ = execute(prob, Plan(tier=tier, sync_every=1))
+        np.testing.assert_array_equal(np.asarray(toks)[:, :k + 1],
+                                      ref[:, :k + 1])
+
+
+def test_decode_planner_structure():
+    prob = _decode_problem("qwen2-0.5b")
+    tiers = [c.tier for c in plan_candidates(prob)]
+    assert "resident" in tiers and "host_loop" in tiers \
+        and "device_loop" in tiers
+    # fused tiers must beat a dispatch per token under the traffic model
+    assert tiers[0] in ("resident", "device_loop")
+    assert tiers[-1] == "host_loop"
+
+    # EOS: only tiers with sync points can retire early -> no resident
+    # candidate, and the winner carries barriers
+    eosp = _decode_problem("qwen2-0.5b", eos_id=0)
+    cands = plan_candidates(eosp)
+    assert all(c.tier != "resident" for c in cands)
+    assert cands[0].sync_every is not None
+
+
+def test_decode_batch_key_excludes_eos():
+    a = _decode_problem("qwen2-0.5b", eos_id=1)
+    b = a.__class__(**{**a.__dict__, "eos_id": 7})
+    assert a.batch_key() == b.batch_key()
+    # but a different decode budget cannot share a runner
+    c = a.__class__(**{**a.__dict__, "n_steps": a.n_steps + 1})
+    assert a.batch_key() != c.batch_key()
+
+
+def test_decode_abstract_probe_plans():
+    """check_regression's idiom: plan on shapes only, no weights."""
+    from repro.configs.registry import get_smoke_config
+    from repro.models.lm import Model
+
+    model = Model(get_smoke_config("qwen2-0.5b"))
+    params = jax.eval_shape(model.init, jax.random.key(0))
+    cache = model.cache_spec(4, 64)
+    first = jax.ShapeDtypeStruct((4,), jnp.int32)
+    prob = DecodeAttentionProblem(model=model, params=params, cache=cache,
+                                  first_tokens=first, n_steps=31)
+    cands = plan_candidates(prob)
+    assert cands and all(c.predicted_s > 0 for c in cands)
+
+
+def test_engine_reports_tier():
+    from repro.configs.registry import get_smoke_config
+    from repro.models.lm import Model
+    from repro.runtime.server import Engine, Request, ServeConfig
+
+    cfg = get_smoke_config("qwen2-0.5b")
+    model = Model(cfg)
+    eng = Engine(model, model.init(KEY),
+                 ServeConfig(max_batch=2, persistent=True))
+    rng = np.random.default_rng(3)
+    eng.submit(Request(prompt=rng.integers(0, cfg.vocab, 8, dtype=np.int32),
+                       max_new_tokens=4))
+    _, stats = eng.run_batch()
+    assert stats["tier"] in ("host_loop", "device_loop", "resident")
+
+
+# -- SSD scan: every tier vs the jnp reference oracle ------------------------
+
+def test_ssm_tiers_match_oracle():
+    prob = _ssm_problem()
+    ref = prob.oracle()
+    for tier in TIERS:
+        y = execute(prob, Plan(tier=tier))
+        np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                                   rtol=1e-3, atol=1e-3,
+                                   err_msg=f"ssm/{tier}")
+
+
+def test_ssm_non_dividing_chunk_shrinks():
+    prob = _ssm_problem(t=60, chunk=16)     # 16 does not divide 60
+    assert prob.chunk_eff == 15 and prob.n_steps == 4
+    y = execute(prob, Plan(tier="device_loop"))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(prob.oracle()),
+                               rtol=1e-3, atol=1e-3)
+    # prime T degrades to per-timestep chunks, still legal on every tier
+    tiny = _ssm_problem(t=13, chunk=8)
+    assert tiny.chunk_eff == 1 and tiny.n_steps == 13
+
+
+def test_ssm_planner_prefers_resident_until_vmem():
+    prob = _ssm_problem(t=256, chunk=32)
+    cands = plan_candidates(prob)
+    assert cands[0].tier == "resident"
+    # a budget smaller than the scratch footprint demotes resident
+    squeezed = plan_candidates(prob, budget_bytes=prob.
+                               resident_scratch_bytes() // 2)
+    assert all(c.tier != "resident" for c in squeezed)
+
+
+def test_ssm_plan_roundtrips_json():
+    prob = _ssm_problem()
+    p = plan(prob)
+    assert Plan.from_json(p.to_json()) == p
